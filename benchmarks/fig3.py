@@ -1,0 +1,126 @@
+"""Reproduction of the paper's Fig. 3: the four benchmark networks under
+stock-XLA-style lowering (``mode="opaque"``) vs TapirXLA-style lowering
+(``mode="tapir"``), wall-time measured on this host's CPU.
+
+Paper protocol mapping:
+  * CNN    — images/s while training (higher is better; ratio = tapir/opaque)
+  * LSTM1  — isolated digit recognition (Braun LSTM bench, small)
+  * LSTM2  — continuous speech recognition (bigger LSTM, per-frame head)
+  * NCF    — MovieLens-1M-shaped neural collaborative filtering
+  * ratio  — performance(tapir) / performance(opaque), i.e. time(opaque)/
+             time(tapir) for the time-metric networks, exactly like the
+             paper's "Ratio" rows.
+
+``--ablate-serialization`` disables the small-task serialization pass in
+tapir mode (paper §III: one of Tapir/LLVM's parallel-specific
+optimizations) to isolate its contribution.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tapir import TapirConfig, clear_cache, use
+from repro.models.paper_nets import (LSTM1, LSTM2, CNNConfig, NCFConfig,
+                                     PaperCNN, PaperLSTM, PaperNCF)
+
+
+def _timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _sgd_step(model, params, batch, lr=1e-3):
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return loss, params
+
+
+def bench_network(name: str, model, batch, mode: str,
+                  ablate_serialization: bool = False,
+                  iters: int = 5) -> dict:
+    clear_cache()
+    cfg = TapirConfig(mode=mode, ablate_serialization=ablate_serialization)
+
+    def step(params, batch):
+        with use(cfg):
+            return _sgd_step(model, params, batch)
+
+    params = model.init(jax.random.PRNGKey(0))
+    jitted = jax.jit(step)
+    t0 = time.perf_counter()
+    loss, _ = jitted(params, batch)
+    jax.block_until_ready(loss)
+    t_compile = time.perf_counter() - t0
+    t = _timeit(jitted, params, batch, iters=iters)
+    return {"net": name, "mode": mode, "t_step_s": t,
+            "t_first_call_s": t_compile, "loss": float(loss)}
+
+
+def make_benches(batch: int, key=None):
+    key = key or jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 8)
+    cnn = PaperCNN(CNNConfig())
+    cnn_batch = {"x": jax.random.normal(ks[0], (batch, 28, 28, 1)),
+                 "y": jax.random.randint(ks[1], (batch,), 0, 10)}
+    l1 = PaperLSTM(LSTM1)
+    l1_batch = {"x": jax.random.normal(ks[2], (batch, LSTM1.seq_len,
+                                               LSTM1.input_dim)),
+                "y": jax.random.randint(ks[3], (batch,), 0, LSTM1.n_classes)}
+    l2 = PaperLSTM(LSTM2)
+    l2_batch = {"x": jax.random.normal(ks[4], (batch, LSTM2.seq_len,
+                                               LSTM2.input_dim)),
+                "y": jax.random.randint(ks[5], (batch, LSTM2.seq_len), 0,
+                                        LSTM2.n_classes)}
+    ncf = PaperNCF(NCFConfig())
+    nb = batch * 8   # NCF rows are tiny; paper uses large eval batches
+    ncf_batch = {"users": jax.random.randint(ks[6], (nb,), 0, 6040),
+                 "items": jax.random.randint(ks[7], (nb,), 0, 3706),
+                 "y": jax.random.randint(ks[7], (nb,), 0, 2)}
+    return [("CNN", cnn, cnn_batch), ("LSTM1", l1, l1_batch),
+            ("LSTM2", l2, l2_batch), ("NCF", ncf, ncf_batch)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--ablate-serialization", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    ratios = []
+    print(f"{'net':8s} {'opaque(s)':>12s} {'tapir(s)':>12s} {'ratio':>7s}")
+    for name, model, batch in make_benches(args.batch):
+        r_op = bench_network(name, model, batch, "opaque", iters=args.iters)
+        r_tp = bench_network(name, model, batch, "tapir",
+                             args.ablate_serialization, iters=args.iters)
+        ratio = r_op["t_step_s"] / r_tp["t_step_s"]
+        ratios.append(ratio)
+        rows += [r_op, r_tp]
+        print(f"{name:8s} {r_op['t_step_s']:12.4f} {r_tp['t_step_s']:12.4f} "
+              f"{ratio:7.2f}")
+    geo = float(np.exp(np.mean(np.log(ratios))))
+    print(f"{'geomean':8s} {'':12s} {'':12s} {geo:7.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "geomean_ratio": geo,
+                       "batch": args.batch,
+                       "ablate_serialization": args.ablate_serialization},
+                      f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Aggregate dry-run JSONs into the roofline table (EXPERIMENTS.md
+§Roofline source of truth).
+
+    PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun
+    PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun --md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str, tag: str | None = None) -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        if tag is not None and not base.endswith(f"_{tag}"):
+            continue
+        if tag is None and any(base.endswith(f"_{t}") for t in
+                               ("opaque", "sp", "mb16", "tuned")):
+            # default view: baseline cells only
+            pass
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt(rows: list[dict], md: bool = False) -> str:
+    hdr = ["arch", "shape", "mesh", "status", "t_comp(s)", "t_mem(s)",
+           "t_coll(s)", "bound", "MF/HLO", "roofline%"]
+    lines = []
+    sep = " | " if md else "  "
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "|".join("---" for _ in hdr) + "|")
+    else:
+        lines.append(sep.join(f"{h:>12s}" if i > 2 else f"{h:22s}"
+                              for i, h in enumerate(hdr)))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("mesh", ""))):
+        if r["status"] != "ok":
+            cells = [r["arch"], r["shape"], r.get("mesh", ""), r["status"],
+                     "-", "-", "-", "-", "-", "-"]
+        else:
+            cells = [
+                r["arch"], r["shape"], r["mesh"], "ok",
+                f"{r['t_compute_s']:.4f}", f"{r['t_memory_s']:.4f}",
+                f"{r['t_collective_s']:.4f}", r["bottleneck"],
+                f"{r.get('useful_flops_ratio', 0):.2f}",
+                f"{100 * r.get('roofline_fraction', 0):.2f}%",
+            ]
+        if md:
+            lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            lines.append(sep.join(
+                f"{str(c):>12s}" if i > 2 else f"{str(c):22s}"
+                for i, c in enumerate(cells)))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_final")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.tag)
+    if not rows:
+        print(f"no dry-run results in {args.dir} — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    print(fmt(rows, md=args.md))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r.get("roofline_fraction", 0))
+        coll = max(ok, key=lambda r: r.get("t_collective_s", 0))
+        print(f"\ncells ok={len(ok)} skip="
+              f"{sum(1 for r in rows if r['status'] == 'skip')} fail="
+              f"{sum(1 for r in rows if r['status'] == 'fail')}")
+        print(f"worst roofline: {worst['arch']}/{worst['shape']}/"
+              f"{worst['mesh']} ({100*worst['roofline_fraction']:.2f}%)")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']}/"
+              f"{coll['mesh']} (t_coll={coll['t_collective_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+  §1 Fig. 3 reproduction      (the paper's only perf table: 4 networks,
+                               opaque vs tapir wall-time on this CPU)
+  §2 Exposed-kernel benefit   (paper §III library-exposure claim, per-op)
+  §3 Small-task serialization ablation (paper §III Tapir/LLVM opts)
+  §4 Roofline summary         (from the multi-pod dry-run artifacts, if
+                               results/dryrun exists)
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced iters
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    iters = 3 if args.quick else 5
+    batch = 32 if args.quick else 64
+
+    print("=" * 72)
+    print("§1 Fig. 3 reproduction (opaque = stock-XLA lowering, "
+          "tapir = this paper)")
+    print("=" * 72)
+    from benchmarks import fig3
+    sys.argv = ["fig3", "--batch", str(batch), "--iters", str(iters),
+                "--json", os.path.join(args.out, "fig3.json")]
+    fig3.main()
+
+    print()
+    print("=" * 72)
+    print("§2 Exposed-kernel fusion benefit (per library op)")
+    print("=" * 72)
+    from benchmarks import kernel_bench
+    sys.argv = ["kernel_bench", "--iters", str(iters),
+                "--json", os.path.join(args.out, "kernel_bench.json")]
+    kernel_bench.main()
+
+    print()
+    print("=" * 72)
+    print("§3 Small-task serialization ablation (tapir mode, "
+          "serialization pass off)")
+    print("=" * 72)
+    sys.argv = ["fig3", "--batch", str(batch), "--iters", str(iters),
+                "--ablate-serialization",
+                "--json", os.path.join(args.out, "fig3_ablate.json")]
+    fig3.main()
+    try:
+        with open(os.path.join(args.out, "fig3.json")) as f:
+            base = json.load(f)["geomean_ratio"]
+        with open(os.path.join(args.out, "fig3_ablate.json")) as f:
+            abl = json.load(f)["geomean_ratio"]
+        print(f"serialization contribution: geomean {base:.2f}x -> "
+              f"{abl:.2f}x without the pass")
+    except Exception:
+        pass
+
+    print()
+    print("=" * 72)
+    print("§4 Roofline summary (from multi-pod dry-run)")
+    print("=" * 72)
+    dr = os.path.join("results", "dryrun_final")
+    if not os.path.isdir(dr):
+        dr = os.path.join("results", "dryrun")
+    if os.path.isdir(dr):
+        from benchmarks import roofline
+        rows = roofline.load(dr)
+        print(roofline.fmt(rows))
+    else:
+        print("results/dryrun not found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--mesh both` (CPU-only; ~1-2h)")
+
+
+if __name__ == "__main__":
+    main()

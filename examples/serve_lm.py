@@ -1,0 +1,18 @@
+"""Batched serving example (KV-cache prefill + decode via ServingEngine).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_driver
+
+
+def main():
+    out = serve_driver.main(["--arch", "qwen2_5_3b", "--smoke",
+                             "--requests", "6", "--batch", "3",
+                             "--prompt-len", "16", "--max-new", "8",
+                             "--max-len", "64"])
+    assert all(r.done for r in out)
+    print(f"served {len(out)} requests ✓")
+
+
+if __name__ == "__main__":
+    main()

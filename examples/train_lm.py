@@ -1,0 +1,43 @@
+"""End-to-end LM training driver (deliverable b): data pipeline ->
+distributed-ready train step -> AdamW -> checkpoints -> fault-tolerant
+loop, on a reduced qwen2.5-family config.
+
+Default is CPU-feasible (~10M params, 200 steps, loss visibly drops).
+``--big`` switches to a ~110M-param config (the "train a ~100M model"
+variant — expect ~1h on this 1-core container, minutes on a real host).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_smoke
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--big", action="store_true",
+                    help="~110M params instead of ~10M")
+    args = ap.parse_args()
+
+    argv = ["--arch", "qwen2_5_3b", "--smoke",
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--ckpt-every", "50"]
+    if args.big:
+        # ~110M params: widen the smoke config in place via a monkeypatch
+        import repro.configs.qwen2_5_3b as qcfg
+        qcfg.SMOKE = dataclasses.replace(
+            qcfg.SMOKE, n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+            d_ff=2048, vocab=151936)
+    state, stats = train_driver.main(argv)
+    assert stats.losses[-1] < stats.losses[0], "loss must decrease"
+    print(f"loss {stats.losses[0]:.3f} -> {stats.losses[-1]:.3f} over "
+          f"{stats.steps_run} steps ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Assigned architecture registry + the input-shape matrix.
+
+40 cells = 10 archs x 4 shapes.  ``applicable`` encodes the assignment's
+skip rules: ``long_500k`` needs sub-quadratic attention, so it runs only
+for the SSM (rwkv6) and hybrid (zamba2) families — the 8 full-attention
+archs skip it (recorded in DESIGN.md §Arch-applicability)."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.models.base import ModelConfig
+
+ARCH_IDS = [
+    "qwen1_5_110b", "command_r_plus_104b", "qwen2_5_3b", "chatglm3_6b",
+    "whisper_small", "moonshot_v1_16b_a3b", "granite_moe_1b_a400m",
+    "rwkv6_7b", "internvl2_76b", "zamba2_7b",
+]
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{arch_id}").CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{arch_id}").SMOKE
+
+
+def applicable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for a cell of the 40-cell matrix."""
+    cfg = get_config(arch_id)
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("full-attention arch: 500k decode needs sub-quadratic "
+                       "attention (skip per assignment; DESIGN.md §6)")
+    return True, ""
+
+
+def all_cells():
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            yield a, s

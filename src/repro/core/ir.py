@@ -1,0 +1,240 @@
+"""Task IR: fork-join parallelism embedded in a tensor task graph.
+
+This is the JAX/TPU adaptation of Tapir's detach/reattach/sync embedding
+(Schardl et al., PPoPP'17; TapirXLA, HPEC'19).  Instead of inserting runtime
+calls early (XLA's historical strategy), every node in the graph records its
+*logical* parallel iteration space.  ``pdims`` are detach-able dimensions
+(every index may execute concurrently — the fork); ``rdims`` are reduction
+dimensions (the join carries a combiner).  A node is therefore a
+``ParallelFor(pdims) { body; reduce(rdims) }`` in Tapir terms, and graph edges
+are ``sync`` dependencies.
+
+No scheduling decision (mesh axis, Pallas grid, serialization, tiling) is
+made at construction time; the pass pipeline optimizes the *parallel* graph
+first, and `core.schedule` binds schedules late — the paper's central claim.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Types
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TensorType:
+    shape: tuple[int, ...]
+    dtype: str  # canonical dtype string, e.g. "bfloat16", "float32", "int32"
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytesize(self) -> int:
+        return self.size * dtype_bytes(self.dtype)
+
+
+def dtype_bytes(dtype: str) -> int:
+    return {
+        "bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+        "int8": 1, "uint8": 1, "int16": 2, "int32": 4, "int64": 8, "bool": 1,
+    }[dtype]
+
+
+# ---------------------------------------------------------------------------
+# Nodes
+# ---------------------------------------------------------------------------
+
+#: Op vocabulary.  "Primitive" ops have pure-jnp lowerings.  "Library" ops
+#: (matmul, attention, linear_scan, conv2d) additionally have *exposed*
+#: implementations in ``repro.kernels`` whose epilogues the fusion pass may
+#: extend — the analogue of TapirXLA linking Tapir bitcode for Eigen routines.
+PRIMITIVE_OPS = frozenset({
+    "input", "const", "ew", "reduce", "reshape", "transpose", "broadcast",
+    "slice", "concat", "split", "select", "iota", "convert", "softmax",
+})
+LIBRARY_OPS = frozenset({"matmul", "attention", "linear_scan", "conv2d"})
+
+
+@dataclass
+class Schedule:
+    """Late-bound execution decisions attached by core.schedule (never at
+    graph construction)."""
+    # per parallel dim: "mesh:<axis>", "grid", "serial", or "vector"
+    dim_binding: dict[int, str] = field(default_factory=dict)
+    tile: dict[str, int] = field(default_factory=dict)  # e.g. {"bm":128,"bn":128,"bk":512}
+    serialized: bool = False          # whole node serialized (small-task)
+    use_kernel: bool = False          # lower via Pallas kernel (TPU target)
+    notes: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Node:
+    nid: int
+    op: str
+    inputs: tuple[int, ...]
+    ttype: TensorType
+    attrs: dict[str, Any] = field(default_factory=dict)
+    # Fork-join structure: indices into ttype.shape (output dims) that are
+    # logically parallel, and named reduction extents joined by a combiner.
+    pdims: tuple[int, ...] = ()
+    rdims: tuple[tuple[str, int], ...] = ()   # (name, extent)
+    # Epilogue: fused elementwise tail (filled by the fusion pass on library
+    # ops).  Each entry: (fn_name, extra_input_nids, attrs).
+    epilogue: list[tuple[str, tuple[int, ...], dict]] = field(default_factory=list)
+    schedule: Schedule = field(default_factory=Schedule)
+
+    def flops(self) -> float:
+        """Logical work of this node (the cost model's W in work/span terms)."""
+        if self.op == "matmul":
+            m, n = self.ttype.shape[-2], self.ttype.shape[-1]
+            k = self.attrs["k"]
+            batch = int(np.prod(self.ttype.shape[:-2])) if len(self.ttype.shape) > 2 else 1
+            return 2.0 * batch * m * n * k
+        if self.op == "conv2d":
+            return 2.0 * self.ttype.size * self.attrs["k_elems"]
+        if self.op == "attention":
+            b, s, h, d = self.attrs["q_shape"]
+            skv = self.attrs["kv_len"]
+            return 4.0 * b * h * s * skv * d
+        if self.op == "linear_scan":
+            return 8.0 * self.ttype.size
+        if self.op in ("ew", "select", "convert", "softmax"):
+            return float(self.ttype.size) * (4.0 if self.op == "softmax" else 1.0)
+        if self.op == "reduce":
+            return float(np.prod([e for _, e in self.rdims]) * self.ttype.size)
+        return 0.0
+
+    def key(self) -> tuple:
+        """Structural hash key for CSE."""
+        frozen_attrs = tuple(sorted((k, _freeze(v)) for k, v in self.attrs.items()))
+        return (self.op, self.inputs, self.ttype, frozen_attrs, self.pdims, self.rdims)
+
+
+def _freeze(v):
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, np.ndarray):
+        return (v.shape, str(v.dtype), v.tobytes())
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Graph
+# ---------------------------------------------------------------------------
+
+
+class TaskGraph:
+    """A DAG of Nodes.  ``inputs`` name the graph parameters; ``outputs``
+    are node ids.  Construction is pure bookkeeping — all optimization and
+    scheduling happens in the pass pipeline."""
+
+    def __init__(self, name: str = "g"):
+        self.name = name
+        self.nodes: dict[int, Node] = {}
+        self.inputs: list[tuple[str, int]] = []   # (param name, nid)
+        self.outputs: list[int] = []
+        self._counter = itertools.count()
+
+    # -- construction -------------------------------------------------------
+    def add(self, op: str, inputs: Iterable[int], ttype: TensorType,
+            pdims: tuple[int, ...] = (), rdims: tuple[tuple[str, int], ...] = (),
+            **attrs) -> int:
+        assert op in PRIMITIVE_OPS or op in LIBRARY_OPS, f"unknown op {op}"
+        nid = next(self._counter)
+        self.nodes[nid] = Node(nid, op, tuple(inputs), ttype, attrs,
+                               tuple(pdims), tuple(rdims))
+        return nid
+
+    def add_input(self, name: str, ttype: TensorType) -> int:
+        nid = self.add("input", (), ttype,
+                       pdims=tuple(range(len(ttype.shape))), name=name)
+        self.inputs.append((name, nid))
+        return nid
+
+    def set_outputs(self, nids: Iterable[int]) -> None:
+        self.outputs = list(nids)
+
+    # -- traversal ----------------------------------------------------------
+    def topo_order(self) -> list[int]:
+        seen: set[int] = set()
+        order: list[int] = []
+
+        def visit(nid: int) -> None:
+            if nid in seen:
+                return
+            seen.add(nid)
+            node = self.nodes[nid]
+            for i in node.inputs:
+                visit(i)
+            for _, extra, _ in node.epilogue:
+                for i in extra:
+                    visit(i)
+            order.append(nid)
+
+        for out in self.outputs:
+            visit(out)
+        return order
+
+    def consumers(self) -> dict[int, list[int]]:
+        cons: dict[int, list[int]] = {nid: [] for nid in self.nodes}
+        for nid, node in self.nodes.items():
+            for i in node.inputs:
+                cons[i].append(nid)
+            for _, extra, _ in node.epilogue:
+                for i in extra:
+                    cons[i].append(nid)
+        return cons
+
+    def replace_uses(self, old: int, new: int) -> None:
+        for node in self.nodes.values():
+            if old in node.inputs:
+                node.inputs = tuple(new if i == old else i for i in node.inputs)
+            node.epilogue = [
+                (fn, tuple(new if i == old else i for i in extra), a)
+                for fn, extra, a in node.epilogue
+            ]
+        self.outputs = [new if o == old else o for o in self.outputs]
+
+    def prune(self) -> int:
+        """Dead-node elimination; returns number removed."""
+        live = set(self.topo_order())
+        dead = [nid for nid in self.nodes if nid not in live]
+        for nid in dead:
+            del self.nodes[nid]
+        self.inputs = [(n, i) for (n, i) in self.inputs if i in live]
+        return len(dead)
+
+    # -- accounting ---------------------------------------------------------
+    def total_flops(self) -> float:
+        return sum(n.flops() for n in self.nodes.values())
+
+    def signature(self) -> tuple:
+        """Hashable structural signature (for the lowering cache)."""
+        parts = []
+        for nid in self.topo_order():
+            n = self.nodes[nid]
+            parts.append((n.key(),
+                          tuple((fn, extra, _freeze(a)) for fn, extra, a in n.epilogue)))
+        return (self.name, tuple(parts), tuple(self.outputs),
+                tuple(n for n, _ in self.inputs))
+
+    def __repr__(self) -> str:
+        lines = [f"TaskGraph({self.name})"]
+        for nid in self.topo_order():
+            n = self.nodes[nid]
+            epi = f" +epi[{','.join(fn for fn, _, _ in n.epilogue)}]" if n.epilogue else ""
+            sch = f" sched={n.schedule.dim_binding}" if n.schedule.dim_binding else ""
+            lines.append(
+                f"  %{nid} = {n.op}{list(n.inputs)} :: {n.ttype.dtype}{list(n.ttype.shape)}"
+                f" pdims={list(n.pdims)} rdims={list(n.rdims)}{epi}{sch}")
+        lines.append(f"  outputs: {self.outputs}")
+        return "\n".join(lines)

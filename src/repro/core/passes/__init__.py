@@ -1,0 +1,42 @@
+"""Optimization pipeline over the Task IR.
+
+Mirrors TapirXLA's split:
+
+* ``mode="tapir"``   — expose library internals (inline), optimize the
+  parallel graph (cse, fusion), then schedule *late* (strip-mining +
+  small-task serialization in ``core.schedule``).
+* ``mode="opaque"``  — stock-XLA control: early per-op heuristics, library
+  calls sealed, no cross-op fusion.
+"""
+from __future__ import annotations
+
+from ..ir import TaskGraph
+from ..schedule import CostModel, assign_early_heuristics, assign_schedules
+from .cse import cse
+from .fusion import fuse_added_gemms, fuse_epilogues, fuse_shared_input
+from .inline import expose_libraries, seal_libraries
+
+
+def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
+                 ablate_serialization: bool = False) -> TaskGraph:
+    if mode == "opaque":
+        seal_libraries(g)
+        assign_early_heuristics(g, cm)
+        g.prune()
+        return g
+    assert mode == "tapir", mode
+    expose_libraries(g)
+    cse(g)
+    fuse_added_gemms(g)
+    cse(g)
+    # fusion SHAPE is a late-scheduling decision: one wide GEMM for BLAS
+    # targets, stacked batched GEMM on the TPU mesh (shard alignment)
+    fuse_shared_input(g, stacked=cm.name.startswith("tpu"))
+    fuse_epilogues(g)
+    g.prune()
+    cm_eff = cm if not ablate_serialization else CostModel(
+        name=cm.name + "+noserial", peak_flops=cm.peak_flops, hbm_bw=cm.hbm_bw,
+        ici_bw=cm.ici_bw, vmem_bytes=cm.vmem_bytes, mxu=cm.mxu,
+        grain_flops=0.0, unroll_max_trip=cm.unroll_max_trip)
+    assign_schedules(g, cm_eff, backend=backend)
+    return g

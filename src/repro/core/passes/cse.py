@@ -1,0 +1,27 @@
+"""Common-subexpression elimination over the task graph.
+
+Because parallelism is *structural* (pdims/rdims on nodes) rather than
+opaque runtime calls, CSE applies to parallel ops exactly as to serial ones —
+the property TapirXLA gets from Tapir and stock XLA loses at the LLVM level."""
+from __future__ import annotations
+
+from ..ir import TaskGraph
+
+
+def cse(g: TaskGraph) -> int:
+    """Hash-cons nodes in topological order; returns #nodes eliminated."""
+    seen: dict[tuple, int] = {}
+    eliminated = 0
+    for nid in g.topo_order():
+        node = g.nodes[nid]
+        if node.op == "input" or node.epilogue:
+            continue
+        key = node.key()
+        if key in seen and seen[key] != nid:
+            g.replace_uses(nid, seen[key])
+            eliminated += 1
+        else:
+            seen[key] = nid
+    if eliminated:
+        g.prune()
+    return eliminated

@@ -1,0 +1,171 @@
+"""Late scheduling: bind fork-join parallelism to hardware AFTER optimization.
+
+TapirXLA's central design point is that XLA's high-level code generator makes
+task-partitioning decisions *before* the optimizer has run, using per-op
+heuristics, while Tapir/LLVM schedules *after* optimization using a cost
+model over the optimized code.  This module is the TPU analogue:
+
+* ``CostModel`` carries the target-hardware constants (MXU shape, VMEM size,
+  HBM bandwidth, grain-size threshold — the moral equivalent of Cilk's
+  spawn overhead).
+* ``assign_schedules`` walks the *fused* graph and binds each parallel dim to
+  ``mesh:<axis>`` / ``grid`` / ``serial`` / ``vector``, picks MXU-aligned tile
+  sizes that fit VMEM (strip-mining), and serializes small tasks.
+
+In ``mode="opaque"`` the pipeline instead calls ``assign_early_heuristics``
+*before* any optimization pass, reproducing stock-XLA behaviour for the A/B
+benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .ir import Node, TaskGraph, dtype_bytes
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """TPU v5e-like target (the roofline constants used across the repo)."""
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    vmem_bytes: int = 128 * 1024 * 1024 # ~128MiB VMEM per core (v5e ~128MB)
+    mxu: int = 128                      # systolic array edge
+    # Small-task serialization threshold: parallel work below this many FLOPs
+    # per task is not worth a grid/mesh binding (analogue of spawn overhead).
+    grain_flops: float = 2.0 * 128 * 128 * 128
+    # scan-vs-unroll: unroll layer loops at or below this trip count
+    unroll_max_trip: int = 4
+
+
+CPU_COST_MODEL = CostModel(name="cpu_host", peak_flops=5e10, hbm_bw=2e10,
+                           ici_bw=1e9, vmem_bytes=1 << 21, mxu=8,
+                           grain_flops=1 << 14, unroll_max_trip=8)
+
+
+def _align(x: int, m: int) -> int:
+    return max(m, (x // m) * m) if x >= m else x
+
+
+def pick_matmul_tiles(m: int, n: int, k: int, dtype: str, cm: CostModel) -> dict[str, int]:
+    """Strip-mining for a GEMM: MXU-aligned (bm, bn, bk) whose working set
+    (A-tile + B-tile + C-tile in fp32 accum) fits in a VMEM budget.
+
+    Greedy: start from (128, 128, k) and shrink bk, then grow bm/bn while the
+    footprint allows — large bk amortizes the C-tile writeback, large bm/bn
+    amortize A/B reloads (classic blocking arithmetic)."""
+    eb = dtype_bytes(dtype)
+    budget = cm.vmem_bytes // 3  # leave room for double-buffering + epilogue operands
+    bm = min(_align(m, cm.mxu), 512)
+    bn = min(_align(n, cm.mxu), 512)
+    bk = min(_align(k, cm.mxu), 2048)
+
+    def footprint(bm, bn, bk):
+        return eb * (bm * bk + bk * bn) + 4 * bm * bn  # fp32 accumulator
+
+    while footprint(bm, bn, bk) > budget and bk > cm.mxu:
+        bk //= 2
+    while footprint(bm, bn, bk) > budget and (bm > cm.mxu or bn > cm.mxu):
+        if bm >= bn and bm > cm.mxu:
+            bm //= 2
+        elif bn > cm.mxu:
+            bn //= 2
+        else:
+            break
+    return {"bm": min(bm, max(m, 1)), "bn": min(bn, max(n, 1)),
+            "bk": min(bk, max(k, 1))}
+
+
+def pick_attention_tiles(s_q: int, s_kv: int, d: int, dtype: str, cm: CostModel) -> dict[str, int]:
+    """Flash-attention blocking: (block_q, block_kv) sized so q/k/v tiles +
+    running stats fit VMEM, MXU-aligned."""
+    eb = dtype_bytes(dtype)
+    budget = cm.vmem_bytes // 4
+    bq = min(_align(s_q, cm.mxu), 512)
+    bkv = min(_align(s_kv, cm.mxu), 1024)
+    while eb * (bq * d + 2 * bkv * d) + 4 * bq * (bkv + d) > budget and bkv > cm.mxu:
+        bkv //= 2
+    while eb * (bq * d + 2 * bkv * d) + 4 * bq * (bkv + d) > budget and bq > cm.mxu:
+        bq //= 2
+    return {"bq": min(bq, max(s_q, 1)), "bkv": min(bkv, max(s_kv, 1))}
+
+
+# ---------------------------------------------------------------------------
+# Late scheduling (tapir mode)
+# ---------------------------------------------------------------------------
+
+
+def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskGraph:
+    """Bind schedules on the optimized graph.
+
+    Policy (per parallel dim, largest extent first):
+      1. dims already bound by the spawn pass to a mesh axis keep it;
+      2. dims with per-task work >= grain_flops become Pallas ``grid`` axes;
+      3. trailing dims of size >= 8 become ``vector`` (VPU lanes);
+      4. everything else is ``serial`` — small-task serialization.
+    Library ops additionally get strip-mined tiles and (on TPU) the Pallas
+    kernel lowering flag."""
+    for nid in g.topo_order():
+        node = g.nodes[nid]
+        if node.op in ("input", "const"):
+            continue
+        work = node.flops() + 1.0
+        shape = node.ttype.shape
+        for d in node.pdims:
+            if d in node.schedule.dim_binding:
+                continue  # spawn pass already bound (e.g. mesh:data)
+            extent = shape[d] if d < len(shape) else 1
+            per_task = work / max(extent, 1)
+            if per_task >= cm.grain_flops:
+                node.schedule.dim_binding[d] = "grid"
+            elif d == len(shape) - 1 and extent >= 8:
+                node.schedule.dim_binding[d] = "vector"
+            else:
+                node.schedule.dim_binding[d] = "serial"
+                node.schedule.notes.append(f"small-task serialized dim{d} "
+                                           f"(per-task {per_task:.0f} flops)")
+        if node.op == "matmul":
+            m, n = shape[-2], shape[-1]
+            node.schedule.tile = pick_matmul_tiles(m, n, node.attrs["k"],
+                                                   node.ttype.dtype, cm)
+            node.schedule.use_kernel = backend == "tpu"
+        elif node.op == "attention":
+            b, s, h, d_ = node.attrs["q_shape"]
+            node.schedule.tile = pick_attention_tiles(s, node.attrs["kv_len"], d_,
+                                                      node.ttype.dtype, cm)
+            node.schedule.use_kernel = backend == "tpu"
+        elif node.op == "linear_scan":
+            # chunk the sequence; carry crosses chunks (the join).  Chunk is
+            # capped at the numerically-exact bound for the factored score
+            # matmul (kernels/linear_scan/ops.SAFE_CHUNK).
+            seq = node.attrs["seq"]
+            node.schedule.tile = {"chunk": min(16, max(seq, 1))}
+            node.schedule.use_kernel = backend == "tpu"
+        node.schedule.serialized = all(
+            b == "serial" for b in node.schedule.dim_binding.values()) and bool(
+            node.schedule.dim_binding)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Early heuristics (opaque mode — the stock-XLA control)
+# ---------------------------------------------------------------------------
+
+
+def assign_early_heuristics(g: TaskGraph, cm: CostModel) -> TaskGraph:
+    """Reproduce the baseline: each op partitioned in isolation, *before*
+    optimization, with a fixed per-op rule (outermost dim parallel, fixed
+    256-row tiles, no epilogue awareness, no kernel lowering)."""
+    for node in g.nodes.values():
+        if node.op in ("input", "const"):
+            continue
+        for d in node.pdims:
+            node.schedule.dim_binding[d] = "grid" if d == 0 else "serial"
+        if node.op in ("matmul", "attention", "conv2d"):
+            node.schedule.tile = {"bm": 256, "bn": 256, "bk": 256}
+        node.schedule.use_kernel = False
+        node.schedule.notes.append("early-heuristic (opaque mode)")
+    return g

@@ -1,0 +1,425 @@
+"""Public op layer: models call these; each call builds a Task IR graph,
+runs the pass pipeline (cached), and executes the lowered computation.
+
+This is the integration point that makes the paper's technique a first-class
+framework feature: every call site picks up the active ``TapirConfig`` —
+``mode="tapir"`` (exposed libraries + fusion + late scheduling) or
+``mode="opaque"`` (stock-XLA-style early heuristics) — so the paper's A/B is
+a config switch, not a code fork.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .ir import TaskGraph, TensorType
+from .lowering import emit
+from .passes import run_pipeline
+from .schedule import CPU_COST_MODEL, CostModel
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TapirConfig:
+    mode: str = "tapir"                  # "tapir" | "opaque"
+    backend: str = "auto"                # "auto" | "cpu" | "tpu"
+    cost_model: Optional[CostModel] = None
+    remat: str = "none"                  # "none" | "full" | "dots"
+    ablate_serialization: bool = False
+    # beyond-paper: emit k-sharded matmul partials in bf16 so TP
+    # all-reduces move half the bytes (per-shard accumulation still runs in
+    # the MXU's f32 accumulators); off for the paper-faithful baseline
+    bf16_partials: bool = False
+
+    def resolved_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        return "tpu" if jax.default_backend() == "tpu" else "cpu"
+
+    def resolved_cost_model(self) -> CostModel:
+        if self.cost_model is not None:
+            return self.cost_model
+        return CostModel() if self.resolved_backend() == "tpu" else CPU_COST_MODEL
+
+
+_tls = threading.local()
+
+
+def get_config() -> TapirConfig:
+    return getattr(_tls, "cfg", TapirConfig())
+
+
+@contextmanager
+def use(cfg: TapirConfig):
+    prev = getattr(_tls, "cfg", None)
+    _tls.cfg = cfg
+    try:
+        yield cfg
+    finally:
+        if prev is None:
+            del _tls.cfg
+        else:
+            _tls.cfg = prev
+
+
+# ---------------------------------------------------------------------------
+# Graph build/execute machinery
+# ---------------------------------------------------------------------------
+
+_CACHE: dict[tuple, Callable] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _tt(x) -> TensorType:
+    return TensorType(tuple(x.shape), str(x.dtype))
+
+
+def _execute(op_key: tuple, build: Callable[[TaskGraph], None],
+             inputs: dict[str, Any]) -> tuple:
+    cfg = get_config()
+    backend = cfg.resolved_backend()
+    key = (op_key, cfg.mode, backend, cfg.ablate_serialization,
+           cfg.resolved_cost_model().name, cfg.bf16_partials)
+    fn = _CACHE.get(key)
+    if fn is None:
+        _CACHE_STATS["misses"] += 1
+        g = TaskGraph(op_key[0])
+        build(g)
+        g = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
+                         ablate_serialization=cfg.ablate_serialization)
+        fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
+        _CACHE[key] = fn
+    else:
+        _CACHE_STATS["hits"] += 1
+    return fn(inputs)
+
+
+def trace_graph(op_key: tuple, build: Callable[[TaskGraph], None]) -> TaskGraph:
+    """Build + optimize a graph without executing (for tests/inspection)."""
+    cfg = get_config()
+    g = TaskGraph(op_key[0])
+    build(g)
+    return run_pipeline(g, cfg.mode, cfg.resolved_cost_model(),
+                        cfg.resolved_backend(),
+                        ablate_serialization=cfg.ablate_serialization)
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+
+def linear(x, w, b=None, activation: Optional[str] = None, residual=None):
+    """y = act(x @ w + b) (+ residual).  Library GEMM with open epilogue."""
+    sig = ("linear", x.shape, str(x.dtype), w.shape, str(w.dtype),
+           b is not None, activation, residual is not None)
+    inputs = {"x": x, "w": w}
+    if b is not None:
+        inputs["b"] = b
+    if residual is not None:
+        inputs["res"] = residual
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(x))
+        wi = g.add_input("w", _tt(w))
+        out_t = TensorType(tuple(x.shape[:-1]) + (w.shape[-1],), str(x.dtype))
+        ndim = len(out_t.shape)
+        mm = g.add("matmul", (xi, wi), out_t, pdims=tuple(range(ndim)),
+                   rdims=(("k", x.shape[-1]),), k=x.shape[-1])
+        head = mm
+        if b is not None:
+            bi = g.add_input("b", _tt(b))
+            head = g.add("ew", (head, bi), out_t, pdims=tuple(range(ndim)), fn="add")
+        if activation is not None:
+            head = g.add("ew", (head,), out_t, pdims=tuple(range(ndim)),
+                         fn=activation)
+        if residual is not None:
+            ri = g.add_input("res", _tt(residual))
+            head = g.add("ew", (head, ri), out_t, pdims=tuple(range(ndim)), fn="add")
+        g.set_outputs([head])
+
+    return _execute(sig, build, inputs)[0]
+
+
+def multi_linear(x, ws: Sequence, bs: Optional[Sequence] = None):
+    """k projections of the same activation (Q,K,V[,G]).  In tapir mode the
+    shared-input fusion pass turns these into ONE wide GEMM + slices."""
+    bs = list(bs) if bs is not None else [None] * len(ws)
+    sig = ("multi_linear", x.shape, str(x.dtype),
+           tuple(w.shape for w in ws), tuple(b is not None for b in bs))
+    inputs = {"x": x}
+    for i, w in enumerate(ws):
+        inputs[f"w{i}"] = w
+    for i, b in enumerate(bs):
+        if b is not None:
+            inputs[f"b{i}"] = b
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(x))
+        outs = []
+        for i, w in enumerate(ws):
+            wi = g.add_input(f"w{i}", _tt(w))
+            out_t = TensorType(tuple(x.shape[:-1]) + (w.shape[-1],), str(x.dtype))
+            ndim = len(out_t.shape)
+            mm = g.add("matmul", (xi, wi), out_t, pdims=tuple(range(ndim)),
+                       rdims=(("k", x.shape[-1]),), k=x.shape[-1])
+            if bs[i] is not None:
+                bi = g.add_input(f"b{i}", _tt(bs[i]))
+                mm = g.add("ew", (mm, bi), out_t, pdims=tuple(range(ndim)), fn="add")
+            outs.append(mm)
+        g.set_outputs(outs)
+
+    return _execute(sig, build, inputs)
+
+
+def gated_mlp(x, w_gate, w_up, w_down, activation: str = "silu"):
+    """SwiGLU MLP: down( act(x@w_gate) * (x@w_up) ).  Gate/up share input ->
+    fused into one GEMM; the mul and the down-proj epilogue fuse too."""
+    sig = ("gated_mlp", x.shape, str(x.dtype), w_gate.shape, w_down.shape,
+           activation)
+    inputs = {"x": x, "wg": w_gate, "wu": w_up, "wd": w_down}
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(x))
+        wg = g.add_input("wg", _tt(w_gate))
+        wu = g.add_input("wu", _tt(w_up))
+        wd = g.add_input("wd", _tt(w_down))
+        hid_t = TensorType(tuple(x.shape[:-1]) + (w_gate.shape[-1],), str(x.dtype))
+        nd = len(hid_t.shape)
+        k = x.shape[-1]
+        mg = g.add("matmul", (xi, wg), hid_t, pdims=tuple(range(nd)),
+                   rdims=(("k", k),), k=k)
+        mu = g.add("matmul", (xi, wu), hid_t, pdims=tuple(range(nd)),
+                   rdims=(("k", k),), k=k)
+        act = g.add("ew", (mg,), hid_t, pdims=tuple(range(nd)), fn=activation)
+        prod = g.add("ew", (act, mu), hid_t, pdims=tuple(range(nd)), fn="mul")
+        out_t = TensorType(tuple(x.shape[:-1]) + (w_down.shape[-1],), str(x.dtype))
+        mm = g.add("matmul", (prod, wd), out_t, pdims=tuple(range(nd)),
+                   rdims=(("k", w_gate.shape[-1]),), k=w_gate.shape[-1])
+        g.set_outputs([mm])
+
+    return _execute(sig, build, inputs)[0]
+
+
+def attention(q, k, v, causal: bool = False, bias=None):
+    """Multi-head attention library op.  q:[B,Sq,Hq,D] k/v:[B,Skv,Hkv,D].
+    GQA is implicit (Hq a multiple of Hkv)."""
+    sig = ("attention", q.shape, k.shape, str(q.dtype), causal, bias is not None)
+    inputs = {"q": q, "k": k, "v": v}
+    if bias is not None:
+        inputs["bias"] = bias
+
+    def build(g: TaskGraph):
+        qi = g.add_input("q", _tt(q))
+        ki = g.add_input("k", _tt(k))
+        vi = g.add_input("v", _tt(v))
+        ins = [qi, ki, vi]
+        if bias is not None:
+            ins.append(g.add_input("bias", _tt(bias)))
+        out_t = TensorType(tuple(q.shape), str(q.dtype))
+        b, s, h, d = q.shape
+        att = g.add("attention", tuple(ins), out_t, pdims=(0, 1, 2),
+                    rdims=(("kv", k.shape[1]),),
+                    causal=causal, q_shape=(b, s, h, d), kv_len=k.shape[1],
+                    kv_heads=k.shape[2])
+        g.set_outputs([att])
+
+    return _execute(sig, build, inputs)[0]
+
+
+def wkv_scan(q, k, v, w, u=None):
+    """Gated linear-attention scan:  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    o_t = q_t S_t (+ u * (q_t . k_t) v_t bonus when u given — RWKV6).
+    q/k/w: [B,S,H,Dk], v: [B,S,H,Dv], u: [H,Dk] or None."""
+    sig = ("wkv_scan", q.shape, v.shape, str(q.dtype), u is not None)
+    inputs = {"q": q, "k": k, "v": v, "w": w}
+    if u is not None:
+        inputs["u"] = u
+
+    def build(g: TaskGraph):
+        ins = [g.add_input(n, _tt(t)) for n, t in
+               (("q", q), ("k", k), ("v", v), ("w", w))]
+        if u is not None:
+            ins.append(g.add_input("u", _tt(u)))
+        out_t = TensorType(tuple(v.shape), str(v.dtype))
+        node = g.add("linear_scan", tuple(ins), out_t, pdims=(0, 2),
+                     rdims=(("seq", q.shape[1]),), seq=q.shape[1],
+                     variant="rwkv6" if u is not None else "gla")
+        g.set_outputs([node])
+
+    return _execute(sig, build, inputs)[0]
+
+
+def expert_mlp(xe, w_gate, w_up, w_down, activation: str = "silu"):
+    """Batched expert FFN: xe [E,C,d] x w [E,d,f].  In opaque mode the
+    batched GEMMs lower to per-expert library calls; in tapir mode a single
+    grouped einsum with fused epilogues."""
+    sig = ("expert_mlp", xe.shape, str(xe.dtype), w_gate.shape, w_down.shape,
+           activation)
+    inputs = {"x": xe, "wg": w_gate, "wu": w_up, "wd": w_down}
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(xe))
+        wg = g.add_input("wg", _tt(w_gate))
+        wu = g.add_input("wu", _tt(w_up))
+        wd = g.add_input("wd", _tt(w_down))
+        E, C, d = xe.shape
+        f = w_gate.shape[-1]
+        hid_t = TensorType((E, C, f), str(xe.dtype))
+        mg = g.add("matmul", (xi, wg), hid_t, pdims=(0, 1, 2),
+                   rdims=(("k", d),), k=d)
+        mu = g.add("matmul", (xi, wu), hid_t, pdims=(0, 1, 2),
+                   rdims=(("k", d),), k=d)
+        act = g.add("ew", (mg,), hid_t, pdims=(0, 1, 2), fn=activation)
+        prod = g.add("ew", (act, mu), hid_t, pdims=(0, 1, 2), fn="mul")
+        out_t = TensorType((E, C, d), str(xe.dtype))
+        mm = g.add("matmul", (prod, wd), out_t, pdims=(0, 1, 2),
+                   rdims=(("k", f),), k=f)
+        g.set_outputs([mm])
+
+    return _execute(sig, build, inputs)[0]
+
+
+def lstm_step(x, h, c, W, b):
+    """One LSTM cell step.  W: [xd+hd, 4*hd] (i,f,g,o), b: [4*hd].
+
+    The graph is built the way stock XLA emitted it — EIGHT separate GEMMs
+    (4 gates x {x,h} slices of W) plus adds — exposing all logical
+    parallelism.  In tapir mode the pipeline (CSE + added-GEMM fusion +
+    shared-input fusion) collapses them into ONE GEMM; in opaque mode they
+    stay eight isolated library calls.  Returns (h', c')."""
+    xd, hd = x.shape[-1], h.shape[-1]
+    sig = ("lstm_step", x.shape, str(x.dtype), W.shape)
+    inputs = {"x": x, "h": h, "c": c, "W": W, "b": b}
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(x))
+        hi = g.add_input("h", _tt(h))
+        ci = g.add_input("c", _tt(c))
+        Wi = g.add_input("W", _tt(W))
+        bi = g.add_input("b", _tt(b))
+        B = x.shape[0]
+        gate_t = TensorType((B, hd), str(x.dtype))
+        Wx_t = TensorType((xd, hd), str(W.dtype))
+        Wh_t = TensorType((hd, hd), str(W.dtype))
+        b_t = TensorType((hd,), str(b.dtype))
+        gates = []
+        for gi in range(4):
+            wx = g.add("slice", (Wi,), TensorType((xd, 4 * hd), str(W.dtype)),
+                       pdims=(0, 1), axis=0, start=0, limit=xd)
+            wx = g.add("slice", (wx,), Wx_t, pdims=(0, 1), axis=1,
+                       start=gi * hd, limit=(gi + 1) * hd)
+            wh = g.add("slice", (Wi,), TensorType((hd, 4 * hd), str(W.dtype)),
+                       pdims=(0, 1), axis=0, start=xd, limit=xd + hd)
+            wh = g.add("slice", (wh,), Wh_t, pdims=(0, 1), axis=1,
+                       start=gi * hd, limit=(gi + 1) * hd)
+            bg = g.add("slice", (bi,), b_t, pdims=(0,), axis=0,
+                       start=gi * hd, limit=(gi + 1) * hd)
+            mx = g.add("matmul", (xi, wx), gate_t, pdims=(0, 1),
+                       rdims=(("k", xd),), k=xd)
+            mh = g.add("matmul", (hi, wh), gate_t, pdims=(0, 1),
+                       rdims=(("k", hd),), k=hd)
+            s = g.add("ew", (mx, mh), gate_t, pdims=(0, 1), fn="add")
+            s = g.add("ew", (s, bg), gate_t, pdims=(0, 1), fn="add")
+            gates.append(s)
+        i_g = g.add("ew", (gates[0],), gate_t, pdims=(0, 1), fn="sigmoid")
+        f_g = g.add("ew", (gates[1],), gate_t, pdims=(0, 1), fn="sigmoid")
+        g_g = g.add("ew", (gates[2],), gate_t, pdims=(0, 1), fn="tanh")
+        o_g = g.add("ew", (gates[3],), gate_t, pdims=(0, 1), fn="sigmoid")
+        fc = g.add("ew", (f_g, ci), gate_t, pdims=(0, 1), fn="mul")
+        ig = g.add("ew", (i_g, g_g), gate_t, pdims=(0, 1), fn="mul")
+        c2 = g.add("ew", (fc, ig), gate_t, pdims=(0, 1), fn="add")
+        tc = g.add("ew", (c2,), gate_t, pdims=(0, 1), fn="tanh")
+        h2 = g.add("ew", (o_g, tc), gate_t, pdims=(0, 1), fn="mul")
+        g.set_outputs([h2, c2])
+
+    h2, c2 = _execute(sig, build, inputs)
+    return h2, c2
+
+
+def conv2d(x, kern, b=None, strides=(1, 1), padding="SAME",
+           activation: Optional[str] = None):
+    """NHWC conv library op with open epilogue."""
+    sig = ("conv2d", x.shape, str(x.dtype), kern.shape, strides, padding,
+           b is not None, activation)
+    inputs = {"x": x, "k": kern}
+    if b is not None:
+        inputs["b"] = b
+
+    def build(g: TaskGraph):
+        xi = g.add_input("x", _tt(x))
+        ki = g.add_input("k", _tt(kern))
+        B, H, Wd, _ = x.shape
+        kh, kw, _, co = kern.shape
+        if padding == "SAME":
+            ho, wo = -(-H // strides[0]), -(-Wd // strides[1])
+        else:
+            ho = (H - kh) // strides[0] + 1
+            wo = (Wd - kw) // strides[1] + 1
+        out_t = TensorType((B, ho, wo, co), str(x.dtype))
+        cv = g.add("conv2d", (xi, ki), out_t, pdims=(0, 1, 2, 3),
+                   rdims=(("k", kh * kw * kern.shape[2]),),
+                   strides=strides, padding=padding,
+                   k_elems=kh * kw * kern.shape[2])
+        head = cv
+        if b is not None:
+            bi = g.add_input("b", _tt(b))
+            head = g.add("ew", (head, bi), out_t, pdims=(0, 1, 2, 3), fn="add")
+        if activation:
+            head = g.add("ew", (head,), out_t, pdims=(0, 1, 2, 3), fn=activation)
+        g.set_outputs([head])
+
+    return _execute(sig, build, inputs)[0]
+
+
+# ---------------------------------------------------------------------------
+# Structured control flow ("loop spawning" decisions)
+# ---------------------------------------------------------------------------
+
+
+def scan_layers(body: Callable, stacked_params, x, unroll_hint: Optional[int] = None):
+    """Run ``x = body(params_i, x)`` over a stacked layer pytree.
+
+    tapir mode: ``lax.scan`` (one lowering of the block; XLA pipelines it)
+    with the config's remat policy — the late scheduling decision.
+    opaque mode: python-unrolled (stock XLA's historical behaviour), capped
+    to keep compile times sane."""
+    cfg = get_config()
+    L = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+
+    if cfg.mode == "opaque" and L <= max(cfg.resolved_cost_model().unroll_max_trip,
+                                         unroll_hint or 0):
+        for i in range(L):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
+            x = body(p_i, x)
+        return x
+
+    fn = body
+    if cfg.remat == "full":
+        fn = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def step(carry, p_i):
+        return fn(p_i, carry), None
+
+    out, _ = jax.lax.scan(step, x, stacked_params)
+    return out
+
+
+def cache_stats() -> dict:
+    return dict(_CACHE_STATS, size=len(_CACHE))
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)

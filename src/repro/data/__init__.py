@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, TokenPipeline, SyntheticSource, FileSource,
+                       Prefetcher)
+
+__all__ = ["DataConfig", "TokenPipeline", "SyntheticSource", "FileSource",
+           "Prefetcher"]

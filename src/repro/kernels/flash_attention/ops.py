@@ -1,0 +1,128 @@
+"""jit'd public wrapper for flash attention.
+
+Layout plumbing ([B,S,H,D] <-> [B,H,S,D]), block-size clamping + padding,
+interpret-mode fallback, custom VJP (backward is the standard recompute-
+based flash gradient, expressed with the jnp oracle so it is correct on
+every backend; a dedicated backward kernel is a TPU-side optimization)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel, ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def flash_attention(q, k, v, causal: bool = False, bias=None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret=None):
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D].  Returns [B, Sq, Hq, D]."""
+    if bias is not None:
+        # bias paths use the composite (rare: relative-position biases)
+        return ref.attention_ref(q, k, v, causal=causal, bias=bias)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+
+    block_q = min(block_q, _round_up(sq, 128))
+    block_kv = min(block_kv, _round_up(skv, 128))
+    sqp, skvp = _round_up(sq, block_q), _round_up(skv, block_kv)
+    if not causal and skvp != skv:
+        # padded keys would receive softmax weight; use the composite
+        return ref.attention_ref(q, k, v, causal=False)
+
+    qt = jnp.moveaxis(q, 2, 1)  # [B, H, S, D]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    # pad KV with -inf-free zeros; masked out because padded keys produce
+    # scores at NEG_INF only under causal; for non-causal we mask via length
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+
+    # align query positions to the END of the kv sequence (decode windows)
+    q_offset = skv - sq if causal else 0
+
+    o = kernel.flash_attention_kernel(
+        qt, kt, vt, causal=causal, block_q=block_q, block_kv=block_kv,
+        q_offset=q_offset, interpret=interpret)
+    o = jnp.moveaxis(o, 1, 2)[:, :sq]
+    return o
+
+
+def flash_attention_jnp(q, k, v, causal: bool = False, block_kv: int = 1024):
+    """Blockwise online-softmax attention in pure jnp (lax.scan over KV
+    blocks).  Functionally identical to the Pallas kernel; this is the
+    lowering used on non-TPU backends when the score matrix would not fit
+    (e.g. 32k-sequence prefill) and the shape the multi-pod dry-run
+    compiles — so the roofline sees flash memory behaviour, not a
+    materialized [Sq, Skv] matrix."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    grp = hq // hkv
+    bkv = min(block_kv, skv)
+    nkv = -(-skv // bkv)
+    skvp = nkv * bkv
+    kp = jnp.pad(k, ((0, 0), (0, skvp - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skvp - skv), (0, 0), (0, 0)))
+    qg = q.reshape(b, sq, hkv, grp, d).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    q_off = skv - sq  # causal: queries aligned to the end of kv
+
+    def step(carry, i):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * bkv, bkv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * bkv, bkv, 1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32)) * scale
+        kpos = i * bkv + jnp.arange(bkv)
+        valid = kpos < skv
+        if causal:
+            qpos = q_off + jnp.arange(sq)
+            valid = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+            valid = valid[None, None, None]
+        else:
+            valid = valid[None, None, None, None, :]
+        s = jnp.where(valid, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, grp, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, grp, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, grp, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nkv))
+    o = acc / jnp.where(l == 0, 1.0, l)[..., None]
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, d)
+    return o.astype(q.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_vjp(q, k, v, causal=False, block_q=128, block_kv=128):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_kv=block_kv)
+
+
+def _fwd(q, k, v, causal, block_q, block_kv):
+    return flash_attention_vjp(q, k, v, causal, block_q, block_kv), (q, k, v)
+
+
+def _bwd(causal, block_q, block_kv, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_,
+                                                          causal=causal),
+                     q, k, v)
+    return vjp(do)
+
+
+flash_attention_vjp.defvjp(_fwd, _bwd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for multi-head attention with GQA + causal masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = False, bias=None):
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D]; Hq % Hkv == 0.
+
+    Grouped computation (no KV repeat materialization), fp32 softmax.
+    Returns [B, Sq, Hq, D] in q.dtype."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    grp = hq // hkv
+    qg = q.reshape(b, sq, hkv, grp, d)
+    scale = 1.0 / np.sqrt(d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        s = s + bias.reshape(b, hkv, grp, sq, skv) if bias.ndim == 4 else s + bias
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""jit'd public wrapper for the fused GEMM kernel.
+
+Handles: leading-batch flattening, padding to tile multiples, epilogue
+spec/operand splitting, interpret-mode fallback on non-TPU backends, and a
+custom VJP (the backward GEMMs route through plain XLA dots; the epilogue
+tail is differentiated by re-tracing the reference composite)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel, ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _classify(epilogue, out_shape):
+    """Split dynamic operands from the static spec the kernel needs."""
+    spec, operands = [], []
+    m, n = out_shape
+    for fn, vals, at in epilogue or []:
+        hp = at.get("head_pos", 0)
+        if not vals:
+            spec.append((fn, "none", hp))
+            continue
+        (v,) = vals  # one operand per epilogue stage
+        if v.ndim <= 1 or (v.ndim == 2 and v.shape[0] == 1):
+            spec.append((fn, "row", hp))
+            operands.append(
+                jnp.broadcast_to(jnp.asarray(v).reshape(1, -1), (1, n)))
+        else:
+            spec.append((fn, "full", hp))
+            operands.append(jnp.broadcast_to(v.reshape(-1, v.shape[-1]), (m, n)))
+    return tuple(spec), operands
+
+
+def fused_matmul(x, w, epilogue=None, tile=None, out_dtype=None,
+                 interpret=None):
+    """y = epilogue(x @ w);  x: [..., k], w: [k, n]."""
+    out_dtype = out_dtype or x.dtype
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(m, k)
+
+    tile = tile or {}
+    bm = min(tile.get("bm", 128), _round_up(m, 8))
+    bn = min(tile.get("bn", 128), _round_up(n, 128))
+    bk = min(tile.get("bk", 512), _round_up(k, 128))
+
+    spec, operands = _classify(epilogue, (m, n))
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    operands = [jnp.pad(o, ((0, 0), (0, np_ - n))) if o.shape[0] == 1
+                else jnp.pad(o, ((0, mp - m), (0, np_ - n))) for o in operands]
+
+    y = kernel.fused_matmul_kernel(x2, wp, operands, spec, bm=bm, bn=bn,
+                                   bk=bk, out_dtype=out_dtype,
+                                   interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+# -- differentiable wrapper ---------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_matmul_vjp(x, w, epi_vals, epi_fns, out_dtype):
+    epilogue = [(fn, [v], at) for (fn, at), v in zip(epi_fns, epi_vals)]
+    return fused_matmul(x, w, epilogue=epilogue, out_dtype=out_dtype)
+
+
+def _fwd(x, w, epi_vals, epi_fns, out_dtype):
+    y = fused_matmul_vjp(x, w, epi_vals, epi_fns, out_dtype)
+    return y, (x, w, epi_vals)
+
+
+def _bwd(epi_fns, out_dtype, res, dy):
+    x, w, epi_vals = res
+
+    def f(x_, w_, vals_):
+        epilogue = [(fn, [v], at) for (fn, at), v in zip(epi_fns, vals_)]
+        return ref.fused_matmul_ref(x_, w_, epilogue=epilogue,
+                                    out_dtype=out_dtype)
+
+    _, vjp = jax.vjp(f, x, w, epi_vals)
+    return vjp(dy)
+
+
+fused_matmul_vjp.defvjp(_fwd, _bwd)

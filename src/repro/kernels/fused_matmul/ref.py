@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused GEMM + open-epilogue library routine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EW = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "maximum": jnp.maximum, "minimum": jnp.minimum,
+    "neg": jnp.negative, "exp": jnp.exp, "square": jnp.square,
+    "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid, "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+}
+
+
+def apply_epilogue(y, epilogue):
+    """epilogue: list of (fn_name, [operand arrays], attrs)."""
+    for fn, vals, at in epilogue or []:
+        vals = [v.astype(y.dtype) for v in vals]
+        f = _EW[fn]
+        if at.get("head_pos", 0) == 0:
+            y = f(y, *vals)
+        else:
+            y = f(vals[0], y, *vals[1:])
+    return y
+
+
+def fused_matmul_ref(x, w, epilogue=None, out_dtype=None):
+    """x: [..., m, k] @ w: [k, n] with fp32 accumulation, then epilogue."""
+    out_dtype = out_dtype or x.dtype
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    y = apply_epilogue(y, epilogue)
+    return y.astype(out_dtype)

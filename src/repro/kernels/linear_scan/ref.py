@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: sequential gated linear-attention recurrence.
+
+State S_t in R^{Dk x Dv} per (batch, head):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+GLA / Mamba2-SSD variant (u is None):   o_t = q_t S_t
+RWKV6 variant (u given, the "bonus"):   o_t = q_t (S_{t-1} + diag(u) k_t^T v_t)
+
+q, k, w: [B, S, H, Dk];  v: [B, S, H, Dv];  u: [H, Dk] or None.
+Everything accumulates in fp32; returns v.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(q, k, v, w, u=None):
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    wf = w.astype(jnp.float32)
+
+    def step(state, t):
+        q_t, k_t, v_t, w_t = (x[:, t] for x in (qf, kf, vf, wf))
+        kv = k_t[..., :, None] * v_t[..., None, :]       # [B,H,Dk,Dv]
+        if u is not None:
+            att = state + u.astype(jnp.float32)[None, :, :, None] * kv
+            o_t = jnp.einsum("bhk,bhkv->bhv", q_t, att)
+            state = w_t[..., None] * state + kv
+        else:
+            state = w_t[..., None] * state + kv
+            o_t = jnp.einsum("bhk,bhkv->bhv", q_t, state)
+        return state, o_t
+
+    init = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    _, o = jax.lax.scan(step, init, jnp.arange(S))
+    return jnp.moveaxis(o, 0, 1).astype(v.dtype)        # [B,S,H,Dv]

@@ -1,0 +1,171 @@
+"""Parse collective traffic + roofline terms out of lowered/compiled HLO.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective bytes, so
+we walk the (optimized, SPMD-partitioned) HLO text and sum operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Collectives are classified ICI vs DCN by their replica
+groups: any group mixing device ids from different pods (id // 256 differs
+on the 512-chip mesh) is DCN traffic.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, ~6.25 GB/s/chip DCN (25 Gbit eth-class, conservative).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9
+CHIPS_PER_POD = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                             r"(?:T\(([\d,]+)\))?")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every typed shape in e.g. '(bf16[8,128], f32[4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _crosses_pod(line: str) -> bool:
+    """True if any replica group mixes devices from different pods."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        for grp in re.findall(r"\{([^}]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.split(",") if x.strip()]
+            if len({i // CHIPS_PER_POD for i in ids}) > 1:
+                return True
+        return False
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota groups [G,S]<=[dims](T(perm)): reconstruct then check pods
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        n = g * s
+        import numpy as np
+        ids = np.arange(n).reshape(dims).transpose(perm).reshape(g, s)
+        return any(len({int(i) // CHIPS_PER_POD for i in row}) > 1
+                   for row in ids)
+    return False
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)       # op -> count
+    bytes_ici: int = 0
+    bytes_dcn: int = 0
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_ici + self.bytes_dcn
+
+
+def collect_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output bytes of every collective op in the HLO module text.
+    Ops inside while-loop bodies are counted once (per-iteration traffic is
+    reported separately by scaling with trip count at the roofline layer —
+    XLA hoists the big per-step collectives out of the scan body in the
+    modules we emit, so single-count is the right default)."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match '%name = <shape> <op>(' and start/done async forms
+        m = re.search(r"=\s+(\([^)]*\)|\S+)\s+([\w-]+)(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        b = shape_bytes(m.group(1))
+        st.counts[base] = st.counts.get(base, 0) + 1
+        if _crosses_pod(ls):
+            st.bytes_dcn += b
+        else:
+            st.bytes_ici += b
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    bytes_ici: float
+    bytes_dcn: float
+    chips: int
+    coll_counts: dict = field(default_factory=dict)
+    model_flops: float = 0.0           # 6ND (train) / 2ND (inference), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # per-device collective bytes: HLO shapes are already per-shard
+        return self.bytes_ici / ICI_BW + self.bytes_dcn / DCN_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """fraction of the dominant-term bound achieved by useful model
+        flops: (model_flops / chips / peak) / max(term)."""
+        t_model = self.model_flops / self.chips / PEAK_FLOPS
+        t_max = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_max if t_max else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "coll_bytes_ici": self.bytes_ici,
+            "coll_bytes_dcn": self.bytes_dcn,
+            "coll_counts": self.coll_counts,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

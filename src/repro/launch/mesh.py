@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the ``pod``
+axis is pure data parallelism over DCN; growing it is how the deployment
+scales to N pods (the gradient all-reduce decomposes hierarchically:
+reduce-scatter inside the pod over ICI, all-reduce across pods over DCN on
+1/(data*model) of the bytes, all-gather inside the pod).
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state (smoke tests run on 1 CPU device; only dryrun.py
+forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over whatever devices exist (tests use
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))

@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures + the paper's 4 benchmark nets.
+
+All perf-critical ops route through ``repro.core.tapir`` so every model
+participates in the paper's opaque/tapir A/B and in the late-scheduling
+pipeline."""
+from .base import BaseModel, ModelConfig, ParamSpec, get_model
+
+__all__ = ["BaseModel", "ModelConfig", "ParamSpec", "get_model"]

@@ -1,0 +1,82 @@
+"""Shared layer primitives (norms, RoPE, shifts) — pure jnp; the GEMM-heavy
+paths live behind ``repro.core.tapir`` ops."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def groupnorm_heads(x, scale, eps: float = 64e-5):
+    """Per-head groupnorm (RWKV6 wkv output norm).  x: [B,S,H,D]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_table(positions, head_dim: int, base: float = 10000.0,
+               fraction: float = 1.0):
+    """cos/sin tables for the rotated ``fraction`` of head dims.
+    positions: [S] (or [B,S]).  Returns cos,sin of [..., S, rot/2]."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / base ** (np.arange(0, rot, 2, dtype=np.float32) / rot)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction: float = 1.0):
+    """x: [B,S,H,D].  chatglm-style '2d/half' rope passes fraction=0.5:
+    only the first half of head dims rotates, the rest pass through."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    if cos.ndim == 2:   # [S, rot/2] -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    elif cos.ndim == 3:  # [B, S, rot/2]
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(*x1.shape[:-1], rot)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+def token_shift(x, state=None):
+    """RWKV token shift: x_{t-1} (zeros or ``state`` [B,1,D] at t=0).
+    Returns (shifted, new_state [B,1,D])."""
+    if state is None:
+        state = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([state, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: [B,S,D], w: [K,D].  ``state``: [B,K-1,D]
+    carry for decode.  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else state

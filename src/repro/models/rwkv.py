@@ -1,0 +1,184 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay).
+
+Time-mix: token-shift interpolation, r/k/v/g projections, a LoRA-produced
+*data-dependent* per-channel decay w_t (the Finch contribution), the WKV
+recurrence via the exposed ``linear_scan`` library kernel, per-head
+groupnorm, and an output gate.  Channel-mix: squared-ReLU FFN with a
+receptance gate.
+
+Simplifications vs. the released checkpoints (recorded in DESIGN.md):
+static token-shift mix coefficients (RWKV5-style) for r/k/v/g; the decay
+keeps the full RWKV6 dynamic form  w = exp(-exp(w0 + tanh(x@A)@B)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tapir
+from repro.dist import shard_act
+from repro.kernels.linear_scan import ops as ls_ops
+
+from . import layers as L
+from .base import BaseModel, ModelConfig, ParamSpec, register_family
+
+LORA_RANK = 64
+
+
+def _rwkv_block_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.hd
+    pdt = cfg.param_dtype
+    Lx = (n_layers,)
+    mu = lambda: ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "zeros")
+    proj = lambda o=d, ax="heads": ParamSpec(Lx + (d, o), pdt,
+                                             ("layers", "embed", ax))
+    return {
+        "ln1": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+        "ln2": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+        # time-mix
+        "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_g": mu(), "mu_w": mu(),
+        "wr": proj(), "wk": proj(), "wv": proj(), "wg": proj(),
+        "wo": ParamSpec(Lx + (d, d), pdt, ("layers", "heads", "embed")),
+        "w0": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "zeros"),
+        "wA": ParamSpec(Lx + (d, LORA_RANK), pdt, ("layers", "embed", None)),
+        "wB": ParamSpec(Lx + (LORA_RANK, d), pdt, ("layers", None, "embed")),
+        "u": ParamSpec(Lx + (H, hd), pdt, ("layers", "heads", None), "zeros"),
+        "ln_x": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+        # channel-mix
+        "mu_ck": mu(), "mu_cr": mu(),
+        "wck": ParamSpec(Lx + (d, ff), pdt, ("layers", "embed", "mlp")),
+        "wcv": ParamSpec(Lx + (ff, d), pdt, ("layers", "mlp", "embed")),
+        "wcr": ParamSpec(Lx + (d, d), pdt, ("layers", "embed", "embed2")),
+    }
+
+
+@register_family("ssm")
+class RWKV6(BaseModel):
+
+    def abstract_params(self) -> dict:
+        cfg = self.cfg
+        pdt = cfg.param_dtype
+        return {
+            "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt,
+                               ("vocab", "embed")),
+            "blocks": _rwkv_block_specs(cfg, cfg.n_layers),
+            "ln_f": ParamSpec((cfg.d_model,), pdt, ("embed",), "ones"),
+            "lm_head": ParamSpec((cfg.d_model, cfg.vocab), pdt,
+                                 ("embed", "vocab")),
+        }
+
+    # -- block ------------------------------------------------------------
+    def _decay(self, p, xw):
+        """w_t = exp(-exp(w0 + tanh(xw @ A) @ B))  in (0, 1)."""
+        lora = tapir.linear(jnp.tanh(tapir.linear(xw, p["wA"])), p["wB"])
+        logw = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+        return jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 2.0)))
+
+    def _time_mix(self, p, x, shift_state=None, wkv_state=None):
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, hd = cfg.n_heads, cfg.hd
+        xs, new_shift = L.token_shift(x, shift_state)
+        mix = lambda mu: x + mu.astype(x.dtype) * (xs - x)
+        xr, xk, xv, xg, xw = (mix(p[m]) for m in
+                              ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+        r = tapir.linear(xr, p["wr"]).reshape(B, S, H, hd)
+        k = tapir.linear(xk, p["wk"]).reshape(B, S, H, hd)
+        v = tapir.linear(xv, p["wv"]).reshape(B, S, H, hd)
+        g = tapir.linear(xg, p["wg"], activation="silu")
+        w = self._decay(p, xw).reshape(B, S, H, hd)
+        r = shard_act(r, "batch", None, "heads", None)
+        u = p["u"].astype(jnp.float32)
+        if wkv_state is None:
+            o = tapir.wkv_scan(r, k, v, w.astype(jnp.float32), u)
+            new_wkv = None
+        else:
+            o, new_wkv = ls_ops.linear_scan_chunked(
+                r, k, v, w, u=u, init_state=wkv_state,
+                return_state=True)
+        o = L.groupnorm_heads(o, p["ln_x"].reshape(H, hd)).reshape(B, S, d)
+        out = tapir.linear(o * g, p["wo"])
+        return out, new_shift, new_wkv
+
+    def _channel_mix(self, p, x, shift_state=None):
+        xs, new_shift = L.token_shift(x, shift_state)
+        mix = lambda mu: x + mu.astype(x.dtype) * (xs - x)
+        k = tapir.linear(mix(p["mu_ck"]), p["wck"], activation="relu")
+        k = k * k
+        rgate = tapir.linear(mix(p["mu_cr"]), p["wcr"], activation="sigmoid")
+        return tapir.linear(k, p["wcv"]) * rgate, new_shift
+
+    def _block(self, p, x):
+        a, _, _ = self._time_mix(p, L.rmsnorm(x, p["ln1"]))
+        x = x + a
+        c, _ = self._channel_mix(p, L.rmsnorm(x, p["ln2"]))
+        return shard_act(x + c, "batch", "seq", None)
+
+    # -- forward ----------------------------------------------------------
+    def forward(self, params, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        cdt = jnp.dtype(cfg.compute_dtype)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+        def body(p, x):
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            return self._block(p, x)
+
+        h = tapir.scan_layers(body, params["blocks"], h)
+        h = L.rmsnorm(h, params["ln_f"])
+        logits = tapir.linear(h, params["lm_head"].astype(h.dtype))
+        return shard_act(logits, "batch", None, "vocab")
+
+    # -- serving (stateful — no KV cache, O(1) per token) ------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        Ln, d = cfg.n_layers, cfg.d_model
+        H, hd = cfg.n_heads, cfg.hd
+        cdt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "tm_shift": jnp.zeros((Ln, batch, 1, d), cdt),
+            "cm_shift": jnp.zeros((Ln, batch, 1, d), cdt),
+            "wkv": jnp.zeros((Ln, batch, H, hd, hd), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_axes(self) -> dict:
+        return {"tm_shift": ("layers", "batch", None, None),
+                "cm_shift": ("layers", "batch", None, None),
+                "wkv": ("layers", "batch", "heads", None, None),
+                "pos": ()}
+
+    def _run_stateful(self, params, tokens, cache):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+        def body(x, xs):
+            p, tm, cm, wkv = xs
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            a, tm, wkv = self._time_mix(p, L.rmsnorm(x, p["ln1"]),
+                                        shift_state=tm, wkv_state=wkv)
+            x = x + a
+            c, cm = self._channel_mix(p, L.rmsnorm(x, p["ln2"]),
+                                      shift_state=cm)
+            return x + c, (tm, cm, wkv)
+
+        h, (tm, cm, wkv) = jax.lax.scan(
+            body, h, (params["blocks"], cache["tm_shift"],
+                      cache["cm_shift"], cache["wkv"]))
+        cache = {"tm_shift": tm, "cm_shift": cm, "wkv": wkv,
+                 "pos": cache["pos"] + tokens.shape[1]}
+        h = L.rmsnorm(h[:, -1:], params["ln_f"])
+        logits = tapir.linear(h, params["lm_head"].astype(h.dtype))
+        return logits[:, -1], cache
+
+    def prefill(self, params, tokens, cache):
+        return self._run_stateful(params, tokens, cache)
+
+    def decode_step(self, params, tokens, cache):
+        return self._run_stateful(params, tokens, cache)

@@ -1,0 +1,224 @@
+"""Dense GQA transformer LM (qwen1.5-110b, command-r-plus, qwen2.5-3b,
+chatglm3 and the internvl2 backbone).  All GEMM-heavy paths route through
+``repro.core.tapir``; layer stacking is a late-scheduled ``scan_layers``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tapir
+from repro.dist import shard_act
+
+from . import layers as L
+from .base import BaseModel, ModelConfig, ParamSpec, register_family
+
+
+def _block_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, Hkv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    pdt = cfg.param_dtype
+    Lx = (n_layers,)
+    spec = {
+        "ln1": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+        "ln2": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+        "wq": ParamSpec(Lx + (d, H * hd), pdt, ("layers", "embed", "heads")),
+        "wk": ParamSpec(Lx + (d, Hkv * hd), pdt, ("layers", "embed", "kv")),
+        "wv": ParamSpec(Lx + (d, Hkv * hd), pdt, ("layers", "embed", "kv")),
+        "wo": ParamSpec(Lx + (H * hd, d), pdt, ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec(Lx + (H * hd,), pdt, ("layers", "heads"), "zeros")
+        spec["bk"] = ParamSpec(Lx + (Hkv * hd,), pdt, ("layers", "kv"), "zeros")
+        spec["bv"] = ParamSpec(Lx + (Hkv * hd,), pdt, ("layers", "kv"), "zeros")
+    if cfg.gated_mlp:
+        spec["wg"] = ParamSpec(Lx + (d, ff), pdt, ("layers", "embed", "mlp"))
+        spec["wu"] = ParamSpec(Lx + (d, ff), pdt, ("layers", "embed", "mlp"))
+        spec["wd"] = ParamSpec(Lx + (ff, d), pdt, ("layers", "mlp", "embed"))
+    else:
+        spec["wu"] = ParamSpec(Lx + (d, ff), pdt, ("layers", "embed", "mlp"))
+        spec["wd"] = ParamSpec(Lx + (ff, d), pdt, ("layers", "mlp", "embed"))
+    return spec
+
+
+@register_family("dense")
+class DenseLM(BaseModel):
+
+    def abstract_params(self) -> dict:
+        cfg = self.cfg
+        pdt = cfg.param_dtype
+        p = {
+            "embed": ParamSpec((cfg.vocab, cfg.d_model), pdt,
+                               ("vocab", "embed"), scale=1.0),
+            "blocks": _block_specs(cfg, cfg.n_layers),
+            "ln_f": ParamSpec((cfg.d_model,), pdt, ("embed",), "ones"),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), pdt,
+                                     ("embed", "vocab"))
+        return p
+
+    # ------------------------------------------------------------------
+    def _attn(self, p, x, cos, sin, causal=True, kv_cache=None, pos=None):
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        bs = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+        q, k, v = tapir.multi_linear(x, [p["wq"], p["wk"], p["wv"]], bs)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        frac = 0.5 if cfg.rope == "half" else 1.0
+        q = L.apply_rope(q, cos, sin, frac)
+        k = L.apply_rope(k, cos, sin, frac)
+        q = shard_act(q, "batch", None, "heads", None)
+        k = shard_act(k, "batch", None, "kv", None)
+        v = shard_act(v, "batch", None, "kv", None)
+
+        if kv_cache is None:
+            o = tapir.attention(q, k, v, causal=causal)
+        else:
+            ck, cv, cpos, is_prefill = kv_cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cpos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cpos, 0, 0))
+            if is_prefill:
+                # flash path over the fresh K/V (cache only written)
+                o = tapir.attention(q, k, v, causal=True)
+            else:
+                o = _masked_decode_attention(q, ck, cv, cpos + S)
+            kv_cache = (ck, cv)
+        o = o.reshape(B, S, H * hd)
+        out = tapir.linear(o, p["wo"])
+        return (out, kv_cache) if kv_cache is not None else (out, None)
+
+    def _mlp(self, p, x):
+        cfg = self.cfg
+        if cfg.gated_mlp:
+            return tapir.gated_mlp(x, p["wg"], p["wu"], p["wd"], cfg.act)
+        return tapir.linear(tapir.linear(x, p["wu"], activation=cfg.act),
+                            p["wd"])
+
+    def _norm(self, x, scale):
+        return L.rmsnorm(x, scale) if self.cfg.norm == "rmsnorm" \
+            else L.layernorm(x, scale)
+
+    def _block(self, p, x, cos, sin):
+        a, _ = self._attn(p, self._norm(x, p["ln1"]), cos, sin)
+        x = x + a
+        x = x + self._mlp(p, self._norm(x, p["ln2"]))
+        return shard_act(x, "batch", "seq", None)
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        return jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+    def _head(self, params, x):
+        x = self._norm(x, params["ln_f"])
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        logits = tapir.linear(x, w.astype(x.dtype))
+        return shard_act(logits, "batch", None, "vocab")
+
+    def backbone(self, params, h, positions):
+        cos, sin = L.rope_table(positions, self.cfg.hd,
+                                fraction=0.5 if self.cfg.rope == "half" else 1.0)
+        cdt = h.dtype
+
+        def body(p, x):
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            return self._block(p, x, cos, sin)
+
+        return tapir.scan_layers(body, params["blocks"], h)
+
+    def forward(self, params, batch: dict):
+        tokens = batch["tokens"]
+        h = self._embed(params, tokens)
+        h = shard_act(h, "batch", "seq", None)
+        positions = jnp.arange(tokens.shape[1])
+        h = self.backbone(params, h, positions)
+        return self._head(params, h)
+
+    # -- serving --------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kv = jnp.dtype(cfg.compute_dtype)
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, kv), "v": jnp.zeros(shape, kv),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kv = jnp.dtype(cfg.compute_dtype)
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jax.ShapeDtypeStruct(shape, kv),
+                "v": jax.ShapeDtypeStruct(shape, kv),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_axes(self) -> dict:
+        # "kvseq": the cache sequence dim shards over the model axis so
+        # decode attention compiles to flash-decode partial softmax and
+        # per-device cache bytes shrink by the TP degree.
+        return {"k": ("layers", "batch", "kvseq", "kv", None),
+                "v": ("layers", "batch", "kvseq", "kv", None),
+                "pos": ()}
+
+    def _run_with_cache(self, params, tokens, cache, positions,
+                        is_prefill: bool):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        h = self._embed(params, tokens)
+        cos, sin = L.rope_table(positions, cfg.hd,
+                                fraction=0.5 if cfg.rope == "half" else 1.0)
+        pos0 = cache["pos"]
+
+        def body(carry, xs):
+            x = carry
+            p, ck, cv = xs
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
+                                     kv_cache=(ck, cv, pos0, is_prefill))
+            x = x + a
+            x = x + self._mlp(p, self._norm(x, p["ln2"]))
+            return x, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(body, h,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ck, "v": cv, "pos": pos0 + tokens.shape[1]}
+        if is_prefill:
+            h = h[:, -1:]   # only the last position's logits are served
+        return self._head(params, h), cache
+
+    def prefill(self, params, tokens, cache):
+        positions = jnp.arange(tokens.shape[1])
+        logits, cache = self._run_with_cache(params, tokens, cache,
+                                             positions, is_prefill=True)
+        return logits[:, -1], cache  # [B, vocab]
+
+    def decode_step(self, params, tokens, cache):
+        positions = cache["pos"] + jnp.arange(tokens.shape[1])
+        logits, cache = self._run_with_cache(params, tokens, cache,
+                                             positions, is_prefill=False)
+        return logits[:, -1], cache
+
+
+def _masked_decode_attention(q, ck, cv, valid_len):
+    """Composite masked attention over a static-length KV cache.
+    q: [B,S,H,hd], ck/cv: [B,maxlen,Hkv,hd]; positions >= valid_len masked."""
+    B, S, H, hd = q.shape
+    maxlen, Hkv = ck.shape[1], ck.shape[2]
+    grp = H // Hkv
+    qg = q.reshape(B, S, Hkv, grp, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    kpos = jnp.arange(maxlen)
+    qpos = valid_len - S + jnp.arange(S)
+    mask = kpos[None, :] <= qpos[:, None]          # causal within cache
+    s = jnp.where(mask[None, None, None], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,82 @@
+"""InternVL2-style VLM: InternLM2 dense backbone + stubbed ViT frontend.
+
+Per the assignment the modality frontend is a STUB — ``input_specs``
+provides precomputed patch embeddings [B, n_img_tokens, d_model] (what
+InternViT + the MLP projector would emit).  The image embeddings are
+prepended to the token embeddings; loss and decode operate on the text
+positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard_act
+
+from .base import register_family
+from .transformer import DenseLM
+
+
+@register_family("vlm")
+class InternVLM(DenseLM):
+
+    def forward(self, params, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        img = batch["image_embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        h_txt = self._embed(params, tokens)
+        h = jnp.concatenate([img, h_txt], axis=1)
+        h = shard_act(h, "batch", "seq", None)
+        positions = jnp.arange(h.shape[1])
+        h = self.backbone(params, h, positions)
+        logits = self._head(params, h)
+        return logits[:, img.shape[1]:]       # text positions only
+
+    def prefill(self, params, tokens, cache, image_embeds=None):
+        """Prefill over [image; prompt]."""
+        cfg = self.cfg
+        if image_embeds is None:
+            return super().prefill(params, tokens, cache)
+        img = image_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        h_txt = self._embed(params, tokens)
+        h = jnp.concatenate([img, h_txt], axis=1)
+        S = h.shape[1]
+        positions = jnp.arange(S)
+        # run the cached path on the fused embedding sequence
+        logits, cache = self._run_embeds_with_cache(params, h, cache,
+                                                    positions)
+        return logits, cache
+
+    def _run_embeds_with_cache(self, params, h, cache, positions):
+        from . import layers as L
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        cos, sin = L.rope_table(positions, cfg.hd)
+        pos0 = cache["pos"]
+
+        def body(carry, xs):
+            x = carry
+            p, ck, cv = xs
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
+                                     kv_cache=(ck, cv, pos0, True))
+            x = x + a
+            x = x + self._mlp(p, self._norm(x, p["ln2"]))
+            return x, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(body, h,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ck, "v": cv, "pos": pos0 + h.shape[1]}
+        return self._head(params, h[:, -1:])[:, -1], cache
+
+    def cache_len(self, seq_len: int, kind: str) -> int:
+        # prefill runs over [image; prompt]: cache must hold both
+        return seq_len + (self.cfg.n_img_tokens if kind == "prefill" else 0)
+
+    def input_specs(self, seq_len: int, batch: int, kind: str) -> dict:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        img = jax.ShapeDtypeStruct((batch, cfg.n_img_tokens, cfg.d_model), cdt)
+        base = super().input_specs(seq_len, batch, kind)
+        if kind in ("train", "prefill"):
+            base["image_embeds"] = img
+        return base

@@ -1,0 +1,235 @@
+"""Whisper-style encoder-decoder (whisper-small backbone).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings [B, n_frames, d_model] (what the two conv
+layers would emit).  Encoder: bidirectional attention + GELU MLP with
+learned positions.  Decoder: causal self-attention + cross-attention to the
+encoder output; cross K/V are computed once at prefill and cached."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tapir
+from repro.dist import shard_act
+
+from . import layers as L
+from .base import BaseModel, ModelConfig, ParamSpec, register_family
+from .transformer import _masked_decode_attention
+
+
+def _attn_specs(cfg: ModelConfig, n_layers: int, prefix: str) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    pdt = cfg.param_dtype
+    Lx = (n_layers,)
+    s = {
+        f"{prefix}wq": ParamSpec(Lx + (d, H * hd), pdt, ("layers", "embed", "heads")),
+        f"{prefix}wk": ParamSpec(Lx + (d, H * hd), pdt, ("layers", "embed", "kv")),
+        f"{prefix}wv": ParamSpec(Lx + (d, H * hd), pdt, ("layers", "embed", "kv")),
+        f"{prefix}wo": ParamSpec(Lx + (H * hd, d), pdt, ("layers", "heads", "embed")),
+        f"{prefix}bq": ParamSpec(Lx + (H * hd,), pdt, ("layers", "heads"), "zeros"),
+        f"{prefix}bv": ParamSpec(Lx + (H * hd,), pdt, ("layers", "kv"), "zeros"),
+        f"{prefix}ln": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+    }
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    pdt = cfg.param_dtype
+    Lx = (n_layers,)
+    return {
+        "wu": ParamSpec(Lx + (d, ff), pdt, ("layers", "embed", "mlp")),
+        "bu": ParamSpec(Lx + (ff,), pdt, ("layers", "mlp"), "zeros"),
+        "wd": ParamSpec(Lx + (ff, d), pdt, ("layers", "mlp", "embed")),
+        "bd": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "zeros"),
+        "ln_mlp": ParamSpec(Lx + (d,), pdt, ("layers", "embed"), "ones"),
+    }
+
+
+@register_family("encdec")
+class WhisperED(BaseModel):
+
+    def abstract_params(self) -> dict:
+        cfg = self.cfg
+        pdt = cfg.param_dtype
+        d = cfg.d_model
+        enc = {**_attn_specs(cfg, cfg.n_enc_layers, "sa_"),
+               **_mlp_specs(cfg, cfg.n_enc_layers)}
+        dec = {**_attn_specs(cfg, cfg.n_layers, "sa_"),
+               **_attn_specs(cfg, cfg.n_layers, "ca_"),
+               **_mlp_specs(cfg, cfg.n_layers)}
+        return {
+            "embed": ParamSpec((cfg.vocab, d), pdt, ("vocab", "embed")),
+            "enc_pos": ParamSpec((cfg.n_frames, d), pdt, ("frames", "embed"),
+                                 "small", scale=0.02),
+            "dec_pos": ParamSpec((cfg.max_seq, d), pdt, ("pos", "embed"),
+                                 "small", scale=0.02),
+            "enc": enc,
+            "dec": dec,
+            "enc_ln_f": ParamSpec((d,), pdt, ("embed",), "ones"),
+            "dec_ln_f": ParamSpec((d,), pdt, ("embed",), "ones"),
+        }
+
+    # -- attention --------------------------------------------------------
+    def _attn(self, p, prefix, x, kv_src, causal, kv_cache=None):
+        cfg = self.cfg
+        B, S, d = x.shape
+        H, hd = cfg.n_heads, cfg.hd
+        xn = L.layernorm(x, p[f"{prefix}ln"])
+        q = tapir.linear(xn, p[f"{prefix}wq"], p[f"{prefix}bq"])
+        if kv_src is not None:       # cross attention source (encoder out)
+            k = tapir.linear(kv_src, p[f"{prefix}wk"])
+            v = tapir.linear(kv_src, p[f"{prefix}wv"], p[f"{prefix}bv"])
+            Skv = kv_src.shape[1]
+        else:
+            k = tapir.linear(xn, p[f"{prefix}wk"])
+            v = tapir.linear(xn, p[f"{prefix}wv"], p[f"{prefix}bv"])
+            Skv = S
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, Skv, H, hd)
+        v = v.reshape(B, Skv, H, hd)
+        if kv_cache is not None:
+            ck, cv, cpos, is_prefill = kv_cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cpos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cpos, 0, 0))
+            if is_prefill:
+                o = tapir.attention(q, k, v, causal=True)
+            else:
+                o = _masked_decode_attention(q, ck, cv, cpos + S)
+            o = o.reshape(B, S, H * hd)
+            return x + tapir.linear(o, p[f"{prefix}wo"]), (ck, cv)
+        o = tapir.attention(q, k, v, causal=causal)
+        o = o.reshape(B, S, H * hd)
+        return x + tapir.linear(o, p[f"{prefix}wo"]), None
+
+    def _mlp(self, p, x):
+        xn = L.layernorm(x, p["ln_mlp"])
+        h = tapir.linear(xn, p["wu"], p["bu"], activation="gelu")
+        return x + tapir.linear(h, p["wd"], p["bd"])
+
+    # -- encoder ----------------------------------------------------------
+    def encode(self, params, frames):
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        h = frames.astype(cdt) + params["enc_pos"][None, :frames.shape[1]
+                                                   ].astype(cdt)
+
+        def body(p, x):
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            x, _ = self._attn(p, "sa_", x, None, causal=False)
+            return self._mlp(p, x)
+
+        h = tapir.scan_layers(body, params["enc"], h)
+        return L.layernorm(h, params["enc_ln_f"])
+
+    # -- decoder ----------------------------------------------------------
+    def _decode_stack(self, params, tokens, enc_out, pos0):
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        S = tokens.shape[1]
+        posemb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos0, S, 0)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt) \
+            + posemb.astype(cdt)[None]
+
+        def body(p, x):
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            x, _ = self._attn(p, "sa_", x, None, causal=True)
+            x, _ = self._attn(p, "ca_", x, enc_out, causal=False)
+            return self._mlp(p, x)
+
+        h = tapir.scan_layers(body, params["dec"], h)
+        h = L.layernorm(h, params["dec_ln_f"])
+        return tapir.linear(h, params["embed"].T.astype(h.dtype))
+
+    def forward(self, params, batch: dict):
+        enc_out = self.encode(params, batch["frames"])
+        logits = self._decode_stack(params, batch["tokens"], enc_out, 0)
+        return shard_act(logits, "batch", None, "vocab")
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        Ln, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+        return {
+            "k": jnp.zeros((Ln, batch, max_len, H, hd), cdt),
+            "v": jnp.zeros((Ln, batch, max_len, H, hd), cdt),
+            "ck": jnp.zeros((Ln, batch, cfg.n_frames, H, hd), cdt),
+            "cv": jnp.zeros((Ln, batch, cfg.n_frames, H, hd), cdt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_axes(self) -> dict:
+        a = ("layers", "batch", "kvseq", "kv", None)
+        return {"k": a, "v": a, "ck": a, "cv": a, "pos": ()}
+
+    def _run_with_cache(self, params, tokens, cache, frames, is_prefill):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        B, S = tokens.shape
+        H, hd = cfg.n_heads, cfg.hd
+        pos0 = cache["pos"]
+        posemb = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos0, S, 0) if not is_prefill \
+            else params["dec_pos"][:S]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cdt) \
+            + posemb.astype(cdt)[None]
+
+        if is_prefill:
+            enc_out = self.encode(params, frames)
+
+        def body(carry, xs):
+            x = carry
+            p, ck, cv, cck, ccv = xs
+            p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
+            x, (ck, cv) = self._attn(p, "sa_", x, None, causal=True,
+                                     kv_cache=(ck, cv, pos0, is_prefill))
+            if is_prefill:   # compute + store cross K/V once
+                cck = tapir.linear(enc_out, p["ca_wk"]
+                                   ).reshape(B, -1, H, hd).astype(cck.dtype)
+                ccv = tapir.linear(enc_out, p["ca_wv"], p["ca_bv"]
+                                   ).reshape(B, -1, H, hd).astype(ccv.dtype)
+            qn = L.layernorm(x, p["ca_ln"])
+            q = tapir.linear(qn, p["ca_wq"], p["ca_bq"]).reshape(B, S, H, hd)
+            o = tapir.attention(q, cck, ccv, causal=False)
+            x = x + tapir.linear(o.reshape(B, S, H * hd), p["ca_wo"])
+            x = self._mlp(p, x)
+            return x, (ck, cv, cck, ccv)
+
+        h, (ck, cv, cck, ccv) = jax.lax.scan(
+            body, h, (params["dec"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        cache = {"k": ck, "v": cv, "ck": cck, "cv": ccv,
+                 "pos": pos0 + S}
+        if is_prefill:
+            h = h[:, -1:]
+        h = L.layernorm(h, params["dec_ln_f"])
+        logits = tapir.linear(h, params["embed"].T.astype(h.dtype))
+        return logits[:, -1], cache
+
+    def prefill(self, params, tokens, cache, frames=None):
+        return self._run_with_cache(params, tokens, cache, frames,
+                                    is_prefill=True)
+
+    def decode_step(self, params, tokens, cache):
+        return self._run_with_cache(params, tokens, cache, None,
+                                    is_prefill=False)
+
+    # -- inputs -----------------------------------------------------------
+    def input_specs(self, seq_len: int, batch: int, kind: str) -> dict:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        frames = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model), cdt)
+        tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        if kind == "train":
+            return {"frames": frames, "tokens": tok,
+                    "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+        if kind == "prefill":
+            return {"frames": frames, "tokens": tok}
+        if kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+        raise ValueError(kind)

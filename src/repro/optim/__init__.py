@@ -1,0 +1,8 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                    global_norm, clip_by_global_norm)
+from .compress import (compress_int8, decompress_int8, CompressionState,
+                       compressed_allreduce)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm", "compress_int8",
+           "decompress_int8", "CompressionState", "compressed_allreduce"]

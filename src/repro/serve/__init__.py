@@ -1,0 +1,5 @@
+from .engine import (ServeConfig, make_prefill_step, make_decode_step,
+                     cache_shardings, Request, ServingEngine)
+
+__all__ = ["ServeConfig", "make_prefill_step", "make_decode_step",
+           "cache_shardings", "Request", "ServingEngine"]

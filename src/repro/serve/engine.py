@@ -1,0 +1,153 @@
+"""Serving: prefill + decode steps under pjit, with a batched engine.
+
+Decode-shape cells (``decode_32k``, ``long_500k``) lower ``decode_step``:
+one new token against a KV cache (or SSM state) of ``seq_len``.  The KV
+cache's *sequence* dim is sharded over the ``model`` axis ("kvseq" logical
+axis) — masked decode attention then compiles to a flash-decode-style
+partial-softmax with a small cross-shard reduction, and per-device cache
+bytes shrink by the TP degree.  Batch shards over (pod, data).
+
+``ServingEngine`` is the host-side loop: continuous batching over a request
+queue, greedy sampling, per-request stop handling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.schedule import CPU_COST_MODEL, CostModel
+from repro.core.tapir import TapirConfig, use
+from repro.dist.sharding import (batch_pspec, logical_to_pspec,
+                                 param_shardings)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    mode: str = "tapir"
+    strategy: str = "tp"
+    max_len: int = 2048
+    greedy: bool = True
+    target: str = "tpu"     # schedule cost model: "tpu" | "cpu"
+
+    def tapir_config(self) -> TapirConfig:
+        cm = CostModel() if self.target == "tpu" else CPU_COST_MODEL
+        return TapirConfig(mode=self.mode, cost_model=cm)
+
+
+def cache_shardings(model, mesh, batch: int, max_len: int):
+    """NamedSharding tree for the model's decode cache."""
+    specs = model.cache_specs(batch, max_len)
+    axes = model.cache_axes()
+
+    def one(sds, ax):
+        if not ax:
+            return NamedSharding(mesh, P())
+        spec = list(logical_to_pspec(ax, mesh, shape=sds.shape))
+        # batch dim: shard over data axes like activations
+        for i, a in enumerate(ax):
+            if a == "batch":
+                bp = batch_pspec(mesh, ndim=1, batch_size=sds.shape[i])
+                spec[i] = bp[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, specs, axes,
+                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def make_prefill_step(model, mesh, cfg: ServeConfig = ServeConfig()):
+    tap = cfg.tapir_config()
+    p_sh = param_shardings(model.param_axes(), model.param_sds(), mesh,
+                           strategy=cfg.strategy)
+
+    def prefill(params, tokens, cache):
+        with use(tap):
+            return model.prefill(params, tokens, cache)
+
+    return jax.jit(prefill, in_shardings=(p_sh, None, None),
+                   donate_argnums=(2,)), p_sh
+
+
+def make_decode_step(model, mesh, cfg: ServeConfig = ServeConfig()):
+    """decode(params, tokens [B,1], cache) -> (next_token [B], cache)."""
+    tap = cfg.tapir_config()
+    p_sh = param_shardings(model.param_axes(), model.param_sds(), mesh,
+                           strategy=cfg.strategy)
+
+    def decode(params, tokens, cache):
+        with use(tap):
+            logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return jax.jit(decode, in_shardings=(p_sh, None, None),
+                   donate_argnums=(2,)), p_sh
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new: int = 32
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Host-side batched serving loop (continuous batching, greedy)."""
+
+    def __init__(self, model, params, mesh=None, batch: int = 8,
+                 max_len: int = 2048, cfg: ServeConfig = ServeConfig()):
+        self.model, self.params = model, params
+        self.batch, self.max_len = batch, max_len
+        self.cfg = cfg
+        if mesh is not None:
+            self._prefill = make_prefill_step(model, mesh, cfg)[0]
+            self._decode = make_decode_step(model, mesh, cfg)[0]
+        else:
+            tap = TapirConfig(mode=cfg.mode)
+
+            def _pf(params, tokens, cache):
+                with use(tap):
+                    return model.prefill(params, tokens, cache)
+
+            def _dc(params, tokens, cache):
+                with use(tap):
+                    logits, cache = model.decode_step(params, tokens, cache)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+            self._prefill = jax.jit(_pf)
+            self._decode = jax.jit(_dc)
+
+    def run(self, requests: list[Request], max_steps: int = 256) -> list[Request]:
+        """Simple continuous batching: group requests into one padded batch
+        per wave (prompts right-aligned), decode until everyone is done."""
+        for wave_start in range(0, len(requests), self.batch):
+            wave = requests[wave_start: wave_start + self.batch]
+            B = len(wave)
+            S = max(len(r.prompt) for r in wave)
+            toks = np.zeros((B, S), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+            cache = self.model.init_cache(B, self.max_len)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32) if logits.ndim > 1 \
+                else logits
+            steps = 0
+            while not all(r.done for r in wave) and steps < max_steps:
+                nxt_np = np.asarray(nxt)
+                for i, r in enumerate(wave):
+                    if not r.done:
+                        r.out.append(int(nxt_np[i]))
+                        if len(r.out) >= r.max_new:
+                            r.done = True
+                nxt, cache = self._decode(self.params, nxt[:, None]
+                                          if nxt.ndim == 1 else nxt, cache)
+                if nxt.ndim > 1:
+                    nxt = nxt[:, 0]
+                steps += 1
+        return requests

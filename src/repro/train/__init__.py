@@ -1,0 +1,5 @@
+from .step import (TrainConfig, make_train_step, make_state_specs,
+                   init_state, state_shardings)
+
+__all__ = ["TrainConfig", "make_train_step", "make_state_specs",
+           "init_state", "state_shardings"]

@@ -1,0 +1,89 @@
+"""Property tests on Task-IR invariants (hypothesis): randomized graphs of
+tapir ops must (1) agree across modes, (2) keep passes idempotent, and
+(3) never lose outputs to pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tapir
+from repro.core.ir import TaskGraph, TensorType
+from repro.core.passes import run_pipeline
+from repro.core.passes.cse import cse
+from repro.core.schedule import CPU_COST_MODEL
+from repro.core.tapir import TapirConfig, clear_cache, use
+
+
+def _random_graph(rng: np.random.Generator, n_ops: int):
+    """Random chain of matmul/ew ops over a [m, k] input."""
+    g = TaskGraph("prop")
+    m = int(rng.integers(2, 9))
+    k = int(rng.integers(2, 17))
+    x = g.add_input("x", TensorType((m, k), "float32"))
+    vals = [(x, k)]
+    weights = {}
+    for i in range(n_ops):
+        src, width = vals[rng.integers(0, len(vals))]
+        if rng.random() < 0.5:
+            w_width = int(rng.integers(2, 17))
+            wname = f"w{i}"
+            wid = g.add_input(wname, TensorType((width, w_width), "float32"))
+            weights[wname] = (width, w_width)
+            nid = g.add("matmul", (src, wid),
+                        TensorType((m, w_width), "float32"),
+                        pdims=(0, 1), rdims=(("k", width),), k=width)
+            vals.append((nid, w_width))
+        else:
+            fn = ["relu", "tanh", "gelu", "silu"][int(rng.integers(0, 4))]
+            nid = g.add("ew", (src,), TensorType((m, width), "float32"),
+                        pdims=(0, 1), fn=fn)
+            vals.append((nid, width))
+    g.set_outputs([vals[-1][0]])
+    return g, m, k, weights
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 8))
+def test_pipeline_preserves_semantics(seed, n_ops):
+    from repro.core.lowering import emit
+    rng = np.random.default_rng(seed)
+    g, m, k, weights = _random_graph(rng, n_ops)
+    inputs = {"x": jnp.asarray(rng.normal(size=(m, k)), jnp.float32)}
+    for wname, shp in weights.items():
+        inputs[wname] = jnp.asarray(rng.normal(size=shp), jnp.float32)
+
+    outs = {}
+    for mode in ("tapir", "opaque"):
+        g2, _, _, _ = _random_graph(np.random.default_rng(seed), n_ops)
+        g2 = run_pipeline(g2, mode, CPU_COST_MODEL, "cpu")
+        outs[mode] = emit(g2, "cpu")(inputs)
+    for a, b in zip(outs["tapir"], outs["opaque"]):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(1, 8))
+def test_cse_idempotent_and_outputs_survive(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    g, _, _, _ = _random_graph(rng, n_ops)
+    outs_before = list(g.outputs)
+    cse(g)
+    n_after_1 = len(g.nodes)
+    cse(g)
+    assert len(g.nodes) == n_after_1, "cse must be idempotent"
+    assert all(o in g.nodes for o in g.outputs)
+    assert len(g.outputs) == len(outs_before)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_prune_keeps_reachable_only(seed):
+    rng = np.random.default_rng(seed)
+    g, _, _, _ = _random_graph(rng, 6)
+    # add garbage
+    x0 = g.inputs[0][1]
+    dead = g.add("ew", (x0,), g.nodes[x0].ttype, pdims=(0, 1), fn="tanh")
+    g.prune()
+    assert dead not in g.nodes
+    live = set(g.topo_order())
+    assert set(g.nodes) == live

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward + one train step on CPU; output shapes and
+finiteness asserted.  Full configs are exercised only by the dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.tapir import clear_cache
+from repro.models.base import get_model
+
+B, S = 2, 16
+
+
+def _batch_for(model, kind="train"):
+    specs = model.input_specs(S, B, kind)
+    rng = np.random.default_rng(0)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(1, min(model.cfg.vocab, 100), size=v.shape),
+                jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=v.shape) * 0.1, v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    clear_cache()
+    cfg = C.get_smoke(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(model)
+
+    logits = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab), (arch, logits.shape)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss)), (arch, float(loss))
+    gnorms = [float(jnp.max(jnp.abs(g.astype(jnp.float32))))
+              for g in jax.tree_util.tree_leaves(grads)]
+    assert all(np.isfinite(gnorms)), arch
+    assert any(g > 0 for g in gnorms), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_smoke_config_matches_family(arch):
+    full = C.get_config(arch)
+    smoke = C.get_smoke(arch)
+    assert full.family == smoke.family
+    assert full.n_params() > smoke.n_params()
+
+
+def test_full_configs_exact():
+    """Spot-check the exact assigned hyperparameters."""
+    q = C.get_config("qwen1_5_110b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab, q.qkv_bias) == (80, 8192, 64, 8, 49152, 152064, True)
+    cr = C.get_config("command_r_plus_104b")
+    assert (cr.n_layers, cr.d_model, cr.n_heads, cr.n_kv_heads, cr.d_ff,
+            cr.vocab, cr.qkv_bias) == (64, 12288, 96, 8, 33792, 256000,
+                                       False)
+    q3 = C.get_config("qwen2_5_3b")
+    assert (q3.n_layers, q3.d_model, q3.n_heads, q3.n_kv_heads, q3.d_ff,
+            q3.vocab) == (36, 2048, 16, 2, 11008, 151936)
+    cg = C.get_config("chatglm3_6b")
+    assert (cg.n_layers, cg.d_model, cg.n_heads, cg.n_kv_heads, cg.d_ff,
+            cg.vocab, cg.rope) == (28, 4096, 32, 2, 13696, 65024, "half")
+    wh = C.get_config("whisper_small")
+    assert (wh.n_layers, wh.d_model, wh.n_heads, wh.d_ff, wh.vocab) == \
+        (12, 768, 12, 3072, 51865)
+    mo = C.get_config("moonshot_v1_16b_a3b")
+    assert (mo.n_layers, mo.d_model, mo.n_experts, mo.top_k, mo.vocab) == \
+        (48, 2048, 64, 6, 163840)
+    gr = C.get_config("granite_moe_1b_a400m")
+    assert (gr.n_layers, gr.d_model, gr.n_experts, gr.top_k, gr.vocab) == \
+        (24, 1024, 32, 8, 49155)
+    rw = C.get_config("rwkv6_7b")
+    assert (rw.n_layers, rw.d_model, rw.d_ff, rw.vocab) == \
+        (32, 4096, 14336, 65536)
+    iv = C.get_config("internvl2_76b")
+    assert (iv.n_layers, iv.d_model, iv.n_heads, iv.n_kv_heads, iv.d_ff,
+            iv.vocab) == (80, 8192, 64, 8, 28672, 128256)
+    za = C.get_config("zamba2_7b")
+    assert (za.n_layers, za.d_model, za.n_heads, za.ssm_state, za.vocab) == \
+        (81, 3584, 32, 64, 32000)
+
+
+def test_cell_matrix_covers_40():
+    cells = list(C.all_cells())
+    assert len(cells) == 40
+    runnable = [c for c in cells if C.applicable(*c)[0]]
+    skipped = [c for c in cells if not C.applicable(*c)[0]]
+    assert len(skipped) == 8          # long_500k for 8 full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("rwkv6_7b", "long_500k") in runnable
+    assert ("zamba2_7b", "long_500k") in runnable

@@ -1,0 +1,66 @@
+"""The paper's four benchmark networks: trainability + mode equivalence
+(the numerics behind the Fig. 3 reproduction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tapir import TapirConfig, clear_cache, use
+from repro.models.paper_nets import (LSTM1, LSTM2, CNNConfig, NCFConfig,
+                                     PaperCNN, PaperLSTM, PaperNCF)
+
+
+def _train(model, batch, mode, steps=5, lr=1e-2):
+    clear_cache()
+    cfg = TapirConfig(mode=mode)
+
+    @jax.jit
+    def step(params):
+        with use(cfg):
+            loss, g = jax.value_and_grad(model.loss)(params, batch)
+        return loss, jax.tree_util.tree_map(lambda p, gg: p - lr * gg,
+                                            params, g)
+
+    params = model.init(jax.random.PRNGKey(0))
+    losses = []
+    for _ in range(steps):
+        loss, params = step(params)
+        losses.append(float(loss))
+    return losses
+
+
+def _batches():
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 8)
+    return {
+        "cnn": (PaperCNN(CNNConfig()),
+                {"x": jax.random.normal(ks[0], (16, 28, 28, 1)),
+                 "y": jax.random.randint(ks[1], (16,), 0, 10)}),
+        "lstm1": (PaperLSTM(LSTM1),
+                  {"x": jax.random.normal(ks[2], (8, 20, LSTM1.input_dim)),
+                   "y": jax.random.randint(ks[3], (8,), 0, 10)}),
+        "lstm2": (PaperLSTM(LSTM2),
+                  {"x": jax.random.normal(ks[4], (4, 12, LSTM2.input_dim)),
+                   "y": jax.random.randint(ks[5], (4, 12), 0,
+                                           LSTM2.n_classes)}),
+        "ncf": (PaperNCF(NCFConfig()),
+                {"users": jax.random.randint(ks[6], (64,), 0, 6040),
+                 "items": jax.random.randint(ks[7], (64,), 0, 3706),
+                 "y": jax.random.randint(ks[6], (64,), 0, 2)}),
+    }
+
+
+@pytest.mark.parametrize("name", ["cnn", "lstm1", "lstm2", "ncf"])
+def test_paper_net_trains(name):
+    model, batch = _batches()[name]
+    losses = _train(model, batch, "tapir", steps=8)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", ["cnn", "lstm1", "lstm2", "ncf"])
+def test_paper_net_mode_equivalence(name):
+    model, batch = _batches()[name]
+    lt = _train(model, batch, "tapir", steps=3)
+    lo = _train(model, batch, "opaque", steps=3)
+    np.testing.assert_allclose(lt, lo, rtol=2e-3, atol=2e-4)

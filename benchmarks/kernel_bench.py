@@ -17,7 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tapir
-from repro.core.tapir import TapirConfig, clear_cache, use
+from repro.core.passes import run_pipeline
+from repro.core.schedule import CPU_COST_MODEL
+from repro.core.tapir import TapirConfig, cache_stats, clear_cache, use
+from repro.models import layers as L
 
 
 def _t(fn, *a, iters=10):
@@ -80,11 +83,113 @@ def bench_op(name, fn, args, iters=10, n_act=1):
     return rows, ratio
 
 
+# ---------------------------------------------------------------------------
+# region_vs_per_op: whole-region capture vs per-op graphs (ISSUE 1 tentpole)
+# ---------------------------------------------------------------------------
+
+_RB, _RS, _RD, _RH, _RHKV, _RHD, _RFF = 8, 128, 256, 8, 4, 32, 1024
+
+
+def _region_block_params(key, n_blocks=4):
+    def init(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(shape[0])
+    out = []
+    for i in range(n_blocks):
+        ks = jax.random.split(jax.random.fold_in(key, i), 7)
+        out.append({
+            "ln1": jnp.ones((_RD,)), "ln2": jnp.ones((_RD,)),
+            "wq": init(ks[0], (_RD, _RH * _RHD)),
+            "wk": init(ks[1], (_RD, _RHKV * _RHD)),
+            "wv": init(ks[2], (_RD, _RHKV * _RHD)),
+            "wo": init(ks[3], (_RH * _RHD, _RD)),
+            "wg": init(ks[4], (_RD, _RFF)),
+            "wu": init(ks[5], (_RD, _RFF)),
+            "wd": init(ks[6], (_RFF, _RD)),
+        })
+    return out
+
+
+def _region_block(p, x, cos, sin):
+    B, S, _ = x.shape
+    xn = L.rmsnorm(x, p["ln1"])
+    q = tapir.linear(xn, p["wq"]).reshape(B, S, _RH, _RHD)
+    k = tapir.linear(xn, p["wk"]).reshape(B, S, _RHKV, _RHD)
+    v = tapir.linear(xn, p["wv"]).reshape(B, S, _RHKV, _RHD)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    a = tapir.attention(q, k, v, causal=True).reshape(B, S, _RH * _RHD)
+    x = x + tapir.linear(a, p["wo"])
+    xn2 = L.rmsnorm(x, p["ln2"])
+    return x + tapir.gated_mlp(xn2, p["wg"], p["wu"], p["wd"])
+
+
+def _region_forward(params, x, cos, sin, regions: bool):
+    for p in params:
+        if regions:
+            x = tapir.parallel_region(_region_block, name="bench_block")(
+                p, x, cos, sin)
+        else:
+            x = _region_block(p, x, cos, sin)
+    return x
+
+
+def bench_region_vs_per_op(iters: int = 20, json_path="BENCH_region.json"):
+    """Times a 4-block transformer forward, per-op graphs vs one region
+    graph per block — the framework-overhead + cross-op-fusion regime the
+    region tracer targets (no outer jit: this is library-call usage).
+    Also times the pass pipeline alone on a 512+-node merged graph."""
+    key = jax.random.PRNGKey(0)
+    params = _region_block_params(key, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 99), (_RB, _RS, _RD))
+    cos, sin = L.rope_table(jnp.arange(_RS), _RHD)
+
+    results = {}
+    for label, regions in (("per_op", False), ("region", True)):
+        clear_cache()
+        with use(TapirConfig(mode="tapir", regions=regions)):
+            t = _t(lambda *a: _region_forward(params, x, cos, sin, regions),
+                   iters=iters)
+            results[label] = {"wall_s": t, "cache": cache_stats()}
+        print(f"region_vs_per_op {label:8s} {t*1e3:9.3f} ms/fwd "
+              f"(pipeline {results[label]['cache']['pipeline_s']*1e3:.1f} ms,"
+              f" {results[label]['cache']['size']} cached graphs)")
+    speedup = results["per_op"]["wall_s"] / results["region"]["wall_s"]
+    print(f"region_vs_per_op speedup: {speedup:.2f}x")
+
+    # pass-pipeline wall time on a big merged graph (the complexity fix:
+    # worklist epilogue fusion + consumer-indexed replace_uses)
+    big_params = _region_block_params(jax.random.fold_in(key, 7), 32)
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.capture_region(
+            lambda x: _region_forward(big_params, x, cos, sin, False), x)
+        n_nodes = len(g.nodes)
+        t0 = time.perf_counter()
+        run_pipeline(g, "tapir", CPU_COST_MODEL, "cpu")
+        pipe_s = time.perf_counter() - t0
+    print(f"pipeline on {n_nodes}-node region graph: {pipe_s*1e3:.1f} ms")
+
+    out = {"per_op": results["per_op"], "region": results["region"],
+           "speedup": speedup,
+           "pipeline_nodes": n_nodes, "pipeline_s": pipe_s,
+           "config": {"blocks": 4, "B": _RB, "S": _RS, "d": _RD}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("case", nargs="?", default="all",
+                    choices=["all", "region_vs_per_op"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
+
+    if args.case == "region_vs_per_op":
+        bench_region_vs_per_op(iters=args.iters,
+                               json_path=args.json or "BENCH_region.json")
+        return
 
     key = jax.random.PRNGKey(0)
     out_rows, ratios = [], {}

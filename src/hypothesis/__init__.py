@@ -1,0 +1,60 @@
+"""Minimal vendored stand-in for the ``hypothesis`` property-testing API.
+
+The container image does not ship hypothesis and nothing may be pip
+installed, so this shim (first on PYTHONPATH via ``src/``) provides the
+tiny subset the test suite uses: ``@given`` with keyword strategies,
+``@settings(max_examples=..., deadline=...)``, and the strategies
+``integers`` / ``booleans`` / ``sampled_from``.
+
+Semantics: ``@given`` runs the test body ``max_examples`` times with
+pseudo-random draws from each strategy.  Draws are seeded from the test
+name, so runs are deterministic across invocations — weaker than real
+hypothesis (no shrinking, no example database) but sufficient for the
+randomized-equivalence tests here.  If the real package is ever installed
+ahead of ``src/`` on the path, it shadows this shim transparently.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+from . import strategies  # noqa: F401
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording run settings (applied above or below @given)."""
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would introspect the wrapped
+        # signature and demand fixtures for the strategy parameters.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                draws = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **draws, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"{draws!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return deco

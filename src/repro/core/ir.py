@@ -58,6 +58,10 @@ def dtype_bytes(dtype: str) -> int:
 PRIMITIVE_OPS = frozenset({
     "input", "const", "ew", "reduce", "reshape", "transpose", "broadcast",
     "slice", "concat", "split", "select", "iota", "convert", "softmax",
+    # opaque python composite (region tracer escape hatch): lowers by calling
+    # ``attrs["fn"]`` on its lowered inputs.  Keeps norms/RoPE/etc. inside a
+    # single region graph without reimplementing their numerics in the IR.
+    "pyfunc",
 })
 LIBRARY_OPS = frozenset({"matmul", "attention", "linear_scan", "conv2d"})
 
@@ -143,6 +147,11 @@ class TaskGraph:
         self.inputs: list[tuple[str, int]] = []   # (param name, nid)
         self.outputs: list[int] = []
         self._counter = itertools.count()
+        # consumer index: nid -> set of nids that read it (inputs or epilogue
+        # extras).  Built lazily, maintained incrementally by add /
+        # replace_uses / add_epilogue / remove_node so fusion passes are
+        # O(consumers) per rewrite instead of O(V·E).
+        self._cons: Optional[dict[int, set[int]]] = None
 
     # -- construction -------------------------------------------------------
     def add(self, op: str, inputs: Iterable[int], ttype: TensorType,
@@ -150,8 +159,13 @@ class TaskGraph:
             **attrs) -> int:
         assert op in PRIMITIVE_OPS or op in LIBRARY_OPS, f"unknown op {op}"
         nid = next(self._counter)
-        self.nodes[nid] = Node(nid, op, tuple(inputs), ttype, attrs,
+        inputs = tuple(inputs)
+        self.nodes[nid] = Node(nid, op, inputs, ttype, attrs,
                                tuple(pdims), tuple(rdims))
+        if self._cons is not None:
+            self._cons[nid] = set()
+            for i in inputs:
+                self._cons.setdefault(i, set()).add(nid)
         return nid
 
     def add_input(self, name: str, ttype: TensorType) -> int:
@@ -164,45 +178,87 @@ class TaskGraph:
         self.outputs = list(nids)
 
     # -- traversal ----------------------------------------------------------
+    def _deps(self, node: Node) -> list[int]:
+        deps = list(node.inputs)
+        for _, extra, _ in node.epilogue:
+            deps.extend(extra)
+        return deps
+
     def topo_order(self) -> list[int]:
+        """Iterative post-order DFS from the outputs.  Region graphs can be
+        thousands of nodes deep (64+ stacked blocks), so recursion would
+        blow the Python stack; an explicit stack keeps the exact visit
+        order of the old recursive walk."""
         seen: set[int] = set()
         order: list[int] = []
-
-        def visit(nid: int) -> None:
-            if nid in seen:
-                return
-            seen.add(nid)
-            node = self.nodes[nid]
-            for i in node.inputs:
-                visit(i)
-            for _, extra, _ in node.epilogue:
-                for i in extra:
-                    visit(i)
-            order.append(nid)
-
         for out in self.outputs:
-            visit(out)
+            if out in seen:
+                continue
+            stack: list[tuple[int, bool]] = [(out, False)]
+            while stack:
+                nid, expanded = stack.pop()
+                if expanded:
+                    order.append(nid)
+                    continue
+                if nid in seen:
+                    continue
+                seen.add(nid)
+                stack.append((nid, True))
+                for i in reversed(self._deps(self.nodes[nid])):
+                    if i not in seen:
+                        stack.append((i, False))
         return order
 
+    # -- consumer index -----------------------------------------------------
+    def _ensure_cons(self) -> dict[int, set[int]]:
+        if self._cons is None:
+            cons: dict[int, set[int]] = {nid: set() for nid in self.nodes}
+            for nid, node in self.nodes.items():
+                for i in self._deps(node):
+                    cons[i].add(nid)
+            self._cons = cons
+        return self._cons
+
     def consumers(self) -> dict[int, list[int]]:
-        cons: dict[int, list[int]] = {nid: [] for nid in self.nodes}
-        for nid, node in self.nodes.items():
-            for i in node.inputs:
-                cons[i].append(nid)
-            for _, extra, _ in node.epilogue:
-                for i in extra:
-                    cons[i].append(nid)
-        return cons
+        """nid -> consumer nids (one entry per consuming node, as before)."""
+        cons = self._ensure_cons()
+        return {nid: sorted(cons.get(nid, ())) for nid in self.nodes}
+
+    def consumers_of(self, nid: int) -> list[int]:
+        return sorted(self._ensure_cons().get(nid, ()))
 
     def replace_uses(self, old: int, new: int) -> None:
-        for node in self.nodes.values():
+        cons = self._ensure_cons()
+        for cid in list(cons.get(old, ())):
+            node = self.nodes[cid]
             if old in node.inputs:
                 node.inputs = tuple(new if i == old else i for i in node.inputs)
-            node.epilogue = [
-                (fn, tuple(new if i == old else i for i in extra), a)
-                for fn, extra, a in node.epilogue
-            ]
+            if node.epilogue:
+                node.epilogue = [
+                    (fn, tuple(new if i == old else i for i in extra), a)
+                    for fn, extra, a in node.epilogue
+                ]
+            cons.setdefault(new, set()).add(cid)
+        cons[old] = set()
         self.outputs = [new if o == old else o for o in self.outputs]
+
+    def add_epilogue(self, nid: int, fn: str, extras: tuple[int, ...],
+                     attrs: dict) -> None:
+        """Append an epilogue entry to ``nid``, keeping the consumer index
+        consistent (the extras gain ``nid`` as a consumer)."""
+        self.nodes[nid].epilogue.append((fn, tuple(extras), attrs))
+        if self._cons is not None:
+            for e in extras:
+                self._cons.setdefault(e, set()).add(nid)
+
+    def remove_node(self, nid: int) -> None:
+        """Remove a node that no longer has consumers (cheap point removal;
+        ``prune`` remains the full sweep)."""
+        node = self.nodes.pop(nid)
+        if self._cons is not None:
+            for i in self._deps(node):
+                self._cons.get(i, set()).discard(nid)
+            self._cons.pop(nid, None)
 
     def prune(self) -> int:
         """Dead-node elimination; returns number removed."""
@@ -211,6 +267,8 @@ class TaskGraph:
         for nid in dead:
             del self.nodes[nid]
         self.inputs = [(n, i) for (n, i) in self.inputs if i in live]
+        if dead:
+            self._cons = None   # rebuild lazily
         return len(dead)
 
     # -- accounting ---------------------------------------------------------

@@ -120,30 +120,41 @@ def _lower_attention(node: Node, env: dict, backend: str) -> Any:
                     q, k, v, causal=causal,
                     block_kv=node.schedule.tile.get("bkv", 1024))
         elif backend == "cpu":
-            # late scheduling, CPU target: the repeat-KV materialized form
-            # beats the grouped-GQA 5D einsum on CPU BLAS (2.4x measured);
-            # the epilogue still fuses below — that's the exposed-library
-            # benefit the opaque control doesn't get.
-            y = _materialized_attention(q, k, v, causal, bias)
+            # late scheduling, CPU target: materialized scores, but with the
+            # K/V head group folded into the einsum — the GQA expansion is
+            # an index remap inside the contraction, never a materialized
+            # jnp.repeat of K/V (only the opaque control pays that copy).
+            y = _materialized_attention(q, k, v, causal, bias, grouped=True)
         else:
             # fused composite: one expression, fp32 accum, grouped KV heads
             y = fa.ref.attention_ref(q, k, v, causal=causal, bias=bias)
         return _apply_epilogue(y, node, env).astype(out_dtype)
 
     # opaque: materialized score matrix, separate softmax ops, repeated KV
-    y = _materialized_attention(q, k, v, causal, bias)
+    y = _materialized_attention(q, k, v, causal, bias, grouped=False)
     return y.astype(out_dtype)
 
 
-def _materialized_attention(q, k, v, causal, bias):
+def _materialized_attention(q, k, v, causal, bias, grouped=False):
     hq, hkv = q.shape[2], k.shape[2]
-    if hkv != hq:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
     scale = 1.0 / np.sqrt(q.shape[-1])
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
-                   preferred_element_type=jnp.float32) * scale
+    grp = hq // hkv
+    if grouped and grp > 1:
+        # exposed path: reshape q into [B,S,Hkv,grp,D] so each kv head is
+        # contracted against its whole query group in one einsum; head index
+        # hkv*grp + g matches the repeat layout exactly.
+        B, sq, _, d = q.shape
+        skv = k.shape[1]
+        qg = q.reshape(B, sq, hkv, grp, d)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s.reshape(B, hq, sq, skv)
+    else:
+        if hkv != hq:
+            k = jnp.repeat(k, grp, axis=2)
+            v = jnp.repeat(v, grp, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
     if bias is not None:
         s = s + bias
     if causal:
@@ -151,6 +162,12 @@ def _materialized_attention(q, k, v, causal, bias):
         mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
         s = jnp.where(mask, s, jnp.finfo(jnp.float32).min)
     p = jax.nn.softmax(s, axis=-1)
+    if grouped and grp > 1:
+        B, _, sq, skv = p.shape
+        pg = p.reshape(B, hkv, grp, sq, skv)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pg.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, sq, hq, v.shape[-1])
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
                       preferred_element_type=jnp.float32)
 
@@ -229,6 +246,9 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
         return env[node.inputs[0]].astype(node.ttype.dtype)
     if op == "iota":
         return jax.lax.iota(node.ttype.dtype, node.ttype.shape[0])
+    if op == "pyfunc":
+        vals = [env[i] for i in node.inputs]
+        return node.attrs["fn"](*vals, **dict(node.attrs.get("static", ())))
     if op == "matmul":
         return _lower_matmul(node, env, backend, bf16_partials)
     if op == "attention":

@@ -166,40 +166,44 @@ def fuse_shared_input(g: TaskGraph, max_iters: int = 8,
 
 
 def fuse_epilogues(g: TaskGraph) -> int:
-    """Fold elementwise tails into exposed library ops' epilogue slots."""
+    """Fold elementwise tails into exposed library ops' epilogue slots.
+
+    Worklist formulation: each exposed library op greedily swallows its
+    single-consumer elementwise chain, with the consumer index updated
+    incrementally — no full graph rescan per fold.  This is what lets the
+    pass scale to 500+-node region graphs (the old version restarted a
+    topo scan after every fold, O(V) per fold → O(V²) per region)."""
     folded = 0
-    changed = True
-    while changed:
-        changed = False
-        cons = g.consumers()
-        for nid in g.topo_order():
-            if nid not in g.nodes:
-                continue
-            n = g.nodes[nid]
-            if n.op not in _FUSABLE or not n.attrs.get("exposed", False):
-                continue
+    work = [nid for nid in g.topo_order()
+            if g.nodes[nid].op in _FUSABLE
+            and g.nodes[nid].attrs.get("exposed", False)]
+    for nid in work:
+        if nid not in g.nodes:
+            continue
+        n = g.nodes[nid]
+        while True:
             if nid in g.outputs:
-                continue
-            users = cons.get(nid, [])
+                break
+            users = g.consumers_of(nid)
             if len(users) != 1:
-                continue
+                break
             c = g.nodes[users[0]]
             if c.op != "ew" or c.attrs.get("fn") not in EPILOGUE_FNS:
-                continue
+                break
             if c.ttype.shape != n.ttype.shape:
-                continue
+                break
             head_pos = c.inputs.index(nid)
             extras = tuple(i for j, i in enumerate(c.inputs) if j != head_pos)
             if nid in extras:  # op used twice by the same consumer
-                continue
+                break
             if any(_depends_on(g, e, nid) for e in extras):
-                continue  # folding would create a cycle through the epilogue
-            n.epilogue.append((c.attrs["fn"], extras,
-                               {"head_pos": head_pos, "dtype": c.ttype.dtype}))
+                break  # folding would create a cycle through the epilogue
+            g.add_epilogue(nid, c.attrs["fn"], extras,
+                           {"head_pos": head_pos, "dtype": c.ttype.dtype})
             g.replace_uses(c.nid, nid)
             n.ttype = TensorType(n.ttype.shape, c.ttype.dtype)
-            g.prune()
+            g.remove_node(c.nid)
             folded += 1
-            changed = True
-            break  # consumers map is stale; restart scan
+    if folded:
+        g.prune()
     return folded

@@ -6,16 +6,37 @@ framework feature: every call site picks up the active ``TapirConfig`` —
 ``mode="tapir"`` (exposed libraries + fusion + late scheduling) or
 ``mode="opaque"`` (stock-XLA-style early heuristics) — so the paper's A/B is
 a config switch, not a code fork.
+
+Two execution regimes:
+
+* **Per-op (eager)** — each public op builds, optimizes, caches and runs its
+  own TaskGraph.  This was the only regime historically, and it is what
+  stock XLA's library-call boundary looks like: no pass ever sees more than
+  one op.
+* **Region capture** — under ``tapir.region()`` / ``@tapir.parallel_region``
+  the same public ops *trace* instead of executing: they return lazy
+  :class:`TracedTensor` handles and append nodes to one region-wide
+  TaskGraph.  At region exit the merged graph runs the full pass pipeline
+  (CSE, added-GEMM fusion, shared-input fusion, epilogue fusion, late
+  scheduling) across every op in the region, is emitted once, cached by
+  structural signature, and executed under a single ``jax.jit``.  Residual
+  adds, norms and sibling projections that live in *different* graphs in
+  the per-op regime become one fused library op with an epilogue — the
+  paper's cross-library-call claim at block scale.
 """
 from __future__ import annotations
 
+import functools
 import threading
+import time
+import weakref
 from contextlib import contextmanager
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .ir import TaskGraph, TensorType
 from .lowering import emit
@@ -38,6 +59,10 @@ class TapirConfig:
     # all-reduces move half the bytes (per-shard accumulation still runs in
     # the MXU's f32 accumulators); off for the paper-faithful baseline
     bf16_partials: bool = False
+    # region capture: when False, ``tapir.region`` / ``parallel_region``
+    # become no-ops and every op runs in the per-op regime (the A/B control
+    # for the region_vs_per_op benchmark).
+    regions: bool = True
 
     def resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -75,28 +100,46 @@ def use(cfg: TapirConfig):
 # ---------------------------------------------------------------------------
 
 _CACHE: dict[tuple, Callable] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "pipeline_s": 0.0}
+#: optimized graphs by cache key — introspection for tests/benchmarks
+_GRAPHS: dict[tuple, TaskGraph] = {}
 
 
 def _tt(x) -> TensorType:
-    return TensorType(tuple(x.shape), str(x.dtype))
+    return TensorType(tuple(x.shape), str(jnp.dtype(x.dtype)))
+
+
+def _cfg_key(cfg: TapirConfig, backend: str) -> tuple:
+    return (cfg.mode, backend, cfg.ablate_serialization,
+            cfg.resolved_cost_model().name, cfg.bf16_partials)
+
+
+def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
+             key: tuple, jit: bool = False) -> Callable:
+    """pipeline + emit with cache bookkeeping (shared by per-op + region)."""
+    t0 = time.perf_counter()
+    g = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
+                     ablate_serialization=cfg.ablate_serialization)
+    fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
+    if jit:
+        fn = jax.jit(fn)
+    _CACHE_STATS["pipeline_s"] += time.perf_counter() - t0
+    _GRAPHS[key] = g
+    _CACHE[key] = fn
+    return fn
 
 
 def _execute(op_key: tuple, build: Callable[[TaskGraph], None],
              inputs: dict[str, Any]) -> tuple:
     cfg = get_config()
     backend = cfg.resolved_backend()
-    key = (op_key, cfg.mode, backend, cfg.ablate_serialization,
-           cfg.resolved_cost_model().name, cfg.bf16_partials)
+    key = (op_key,) + _cfg_key(cfg, backend)
     fn = _CACHE.get(key)
     if fn is None:
         _CACHE_STATS["misses"] += 1
         g = TaskGraph(op_key[0])
         build(g)
-        g = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
-                         ablate_serialization=cfg.ablate_serialization)
-        fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
-        _CACHE[key] = fn
+        fn = _compile(g, cfg, backend, key)
     else:
         _CACHE_STATS["hits"] += 1
     return fn(inputs)
@@ -113,12 +156,656 @@ def trace_graph(op_key: tuple, build: Callable[[TaskGraph], None]) -> TaskGraph:
 
 
 # ---------------------------------------------------------------------------
+# Region capture: TracedTensor + _Region
+# ---------------------------------------------------------------------------
+
+
+class TracedTensor:
+    """Lazy handle to a node in an open region graph.
+
+    Supports the tensor surface model code actually uses between op calls
+    (arithmetic, ``reshape``, ``astype``); anything else coerces via
+    ``__jax_array__``, which *flushes* the region segment (executes the
+    pending graph) and degrades gracefully to a concrete array — capture is
+    best-effort, correctness is unconditional."""
+
+    __slots__ = ("_region", "nid", "ttype", "_concrete", "__weakref__")
+
+    def __init__(self, region: "_Region", nid: Optional[int],
+                 ttype: TensorType, concrete=None):
+        self._region = region
+        self.nid = nid
+        self.ttype = ttype
+        self._concrete = concrete
+
+    # -- metadata --------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.ttype.shape)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.ttype.dtype)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.ttype.shape)
+
+    def __repr__(self) -> str:
+        state = "concrete" if self._concrete is not None else "lazy"
+        return (f"TracedTensor({self.ttype.dtype}{list(self.ttype.shape)}, "
+                f"{state})")
+
+    # -- materialization -------------------------------------------------
+    def jax(self):
+        """Concrete value; flushes the region segment if still pending."""
+        if self._concrete is None:
+            if self._region.closed:
+                raise RuntimeError("TracedTensor from an abandoned region")
+            self._region.flush()
+        return self._concrete
+
+    def __jax_array__(self):
+        return jnp.asarray(self.jax())
+
+    # -- traced ops ------------------------------------------------------
+    def _bin(self, other, fn: str, swap: bool = False):
+        reg = self._region
+        if reg.closed:
+            a = self.jax()
+            b = other.jax() if isinstance(other, TracedTensor) else other
+            return _EAGER_BIN[fn](b, a) if swap else _EAGER_BIN[fn](a, b)
+        a = reg.nid_of(self)
+        b = reg.operand_nid(other, like=self)
+        o_shape = np.broadcast_shapes(self.shape, _shape_of(other))
+        o_dtype = _promote(self.ttype.dtype, other)
+        out_t = TensorType(tuple(int(s) for s in o_shape), o_dtype)
+        ins = (b, a) if swap else (a, b)
+        nid = reg.g.add("ew", ins, out_t,
+                        pdims=tuple(range(len(out_t.shape))), fn=fn)
+        return reg.handle(nid)
+
+    def __add__(self, other):
+        return self._bin(other, "add")
+
+    def __radd__(self, other):
+        return self._bin(other, "add", swap=True)
+
+    def __sub__(self, other):
+        return self._bin(other, "sub")
+
+    def __rsub__(self, other):
+        return self._bin(other, "sub", swap=True)
+
+    def __mul__(self, other):
+        return self._bin(other, "mul")
+
+    def __rmul__(self, other):
+        return self._bin(other, "mul", swap=True)
+
+    def __truediv__(self, other):
+        return self._bin(other, "div")
+
+    def __rtruediv__(self, other):
+        return self._bin(other, "div", swap=True)
+
+    def __neg__(self):
+        reg = self._region
+        if reg.closed:
+            return -self.jax()
+        nid = reg.g.add("ew", (reg.nid_of(self),), self.ttype,
+                        pdims=tuple(range(self.ndim)), fn="neg")
+        return reg.handle(nid)
+
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        shape = _resolve_reshape(self.shape, shape)
+        reg = self._region
+        if reg.closed:
+            return jnp.reshape(self.jax(), shape)
+        out_t = TensorType(shape, self.ttype.dtype)
+        nid = reg.g.add("reshape", (reg.nid_of(self),), out_t,
+                        pdims=tuple(range(len(shape))))
+        return reg.handle(nid)
+
+    def astype(self, dtype):
+        dt = str(jnp.dtype(dtype))
+        if dt == self.ttype.dtype:
+            return self
+        reg = self._region
+        if reg.closed:
+            return self.jax().astype(dtype)
+        out_t = TensorType(self.shape, dt)
+        nid = reg.g.add("convert", (reg.nid_of(self),), out_t,
+                        pdims=tuple(range(self.ndim)))
+        return reg.handle(nid)
+
+
+_EAGER_BIN = {"add": lambda a, b: a + b, "sub": lambda a, b: a - b,
+              "mul": lambda a, b: a * b, "div": lambda a, b: a / b}
+
+
+def _shape_of(v) -> tuple:
+    return tuple(getattr(v, "shape", ()))
+
+
+def _promote(dtype: str, other) -> str:
+    if isinstance(other, (int, float, bool)):
+        return dtype   # python scalars are weakly typed, keep tensor dtype
+    return str(jnp.promote_types(dtype, jnp.dtype(other.dtype)))
+
+
+def _resolve_reshape(cur: tuple, shape: tuple) -> tuple[int, ...]:
+    shape = tuple(int(s) for s in shape)
+    if -1 in shape:
+        known = int(np.prod([s for s in shape if s != -1])) or 1
+        total = int(np.prod(cur)) if cur else 1
+        shape = tuple(total // known if s == -1 else s for s in shape)
+    return shape
+
+
+def is_traced(x) -> bool:
+    return isinstance(x, TracedTensor)
+
+
+class _Region:
+    """One open capture: a growing TaskGraph plus the concrete values bound
+    to its input nodes.  ``flush`` executes the pending segment (the lazy-
+    tensor escape hatch); ``finalize`` executes whatever handles are still
+    alive at region exit (dead intermediates are never emitted)."""
+
+    def __init__(self, name: str, cfg: TapirConfig):
+        self.name = name
+        self.cfg = cfg
+        self.closed = False
+        self.segments = 0
+        self.g = TaskGraph(name)
+        self._inp_by_id: dict[int, int] = {}
+        self._inp_vals: list[Any] = []
+        self._handles: list[weakref.ref] = []
+
+    # -- value -> nid ----------------------------------------------------
+    def nid_of(self, x) -> int:
+        if isinstance(x, TracedTensor):
+            if x._concrete is not None:
+                x = x._concrete         # arg wrapper or flushed handle
+            elif x._region is self:
+                return x.nid
+            else:
+                raise ValueError(
+                    "TracedTensor used outside the region that created it")
+        key = id(x)
+        nid = self._inp_by_id.get(key)
+        if nid is None:
+            name = f"a{len(self._inp_vals)}"
+            nid = self.g.add_input(name, _tt(x))
+            self._inp_by_id[key] = nid
+            self._inp_vals.append(x)    # also pins id(x)
+        return nid
+
+    def operand_nid(self, v, like: TracedTensor) -> int:
+        if isinstance(v, (int, float, bool)):
+            return self.g.add("const", (), TensorType((), like.ttype.dtype),
+                              value=v)
+        return self.nid_of(v)
+
+    def handle(self, nid: int) -> TracedTensor:
+        h = TracedTensor(self, nid, self.g.nodes[nid].ttype)
+        self._handles.append(weakref.ref(h))
+        return h
+
+    def wrap(self, val) -> TracedTensor:
+        """Wrap a concrete array as a passthrough handle (region arg)."""
+        return TracedTensor(self, None, _tt(val), concrete=val)
+
+    # -- execution -------------------------------------------------------
+    def _pending(self) -> list[TracedTensor]:
+        out, live = [], []
+        for r in self._handles:
+            h = r()
+            if h is None:
+                continue
+            live.append(r)
+            if h._concrete is None and h.nid is not None:
+                out.append(h)
+        self._handles = live
+        return out
+
+    def _run(self, outs: list[TracedTensor]) -> None:
+        self.g.set_outputs([h.nid for h in outs])
+        cfg, backend = self.cfg, self.cfg.resolved_backend()
+        key = ("region", self.g.signature()) + _cfg_key(cfg, backend)
+        fn = _CACHE.get(key)
+        if fn is None:
+            _CACHE_STATS["misses"] += 1
+            fn = _compile(self.g, cfg, backend, key, jit=True)
+        else:
+            _CACHE_STATS["hits"] += 1
+        self._last_fn = fn
+        inputs = {f"a{i}": v for i, v in enumerate(self._inp_vals)}
+        results = fn(inputs)
+        for h, r in zip(outs, results):
+            h._concrete = r
+
+    def flush(self) -> None:
+        """Materialize the current segment; capture continues afresh."""
+        pending = self._pending()
+        if pending:
+            self._run(pending)
+        self.segments += 1
+        self.g = TaskGraph(f"{self.name}#{self.segments}")
+        self._inp_by_id = {}
+        self._inp_vals = []
+
+    def finalize(self) -> None:
+        pending = self._pending()
+        if pending:
+            self._run(pending)
+        self.closed = True
+
+    def abandon(self) -> None:
+        self.closed = True
+
+
+def _region_stack() -> list:
+    if not hasattr(_tls, "regions"):
+        _tls.regions = []
+    return _tls.regions
+
+
+def _active_region() -> Optional[_Region]:
+    stack = _region_stack()
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def region(name: str = "region"):
+    """Context manager form of region capture.  Nested regions merge into
+    the outermost one; with ``TapirConfig.regions=False`` this is a no-op
+    (ops run per-op, the benchmark control).
+
+    NOTE: the context-manager form re-traces its body every invocation
+    (only compilation is deduped, via the graph-signature cache) — there is
+    no call site to key a replay on.  Hot loops should prefer
+    ``@parallel_region``, whose program cache skips tracing entirely on
+    structurally repeated calls."""
+    if _active_region() is not None or not get_config().regions:
+        yield _active_region()
+        return
+    r = _Region(name, get_config())
+    stack = _region_stack()
+    stack.append(r)
+    try:
+        yield r
+    except BaseException:
+        r.abandon()
+        raise
+    finally:
+        stack.pop()
+    r.finalize()
+
+
+#: call-site program cache: (body identity, arg treedef, leaf shapes,
+#: config) -> a fast replay closure.  A hit skips region tracing entirely —
+#: per call, a whole block costs ONE dict probe + ONE jitted call instead
+#: of N per-op cache probes (or a full re-trace).  Values hold strong refs
+#: to the body (and its __self__) so ids in the key can't be recycled.
+_PROGRAMS: dict[tuple, tuple] = {}
+
+
+def _leaf_key(v):
+    if _is_arraylike(v):
+        return ("arr", tuple(v.shape), str(jnp.dtype(v.dtype)))
+    try:
+        hash(v)
+    except TypeError:
+        return None
+    return ("obj", v)
+
+
+def parallel_region(fn=None, *, name: Optional[str] = None):
+    """Decorator form: array arguments enter the region as lazy handles,
+    the return pytree is materialized (one pipeline run + one ``jax.jit``
+    call for the whole body) and returned as concrete arrays.  Structurally
+    repeated calls replay through the program cache without re-tracing."""
+    def deco(f):
+        f_id = (id(getattr(f, "__func__", f)), id(getattr(f, "__self__", None)))
+
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            if _active_region() is not None or not get_config().regions:
+                return f(*args, **kwargs)
+            cfg = get_config()
+            leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+            lks = [_leaf_key(v) for v in leaves]
+            # aliasing pattern: which leaves are the SAME array object.  The
+            # region dedups aliased inputs into one graph input, so a replay
+            # is only valid for calls with the identical aliasing.
+            first_seen: dict[int, int] = {}
+            alias = tuple(first_seen.setdefault(id(v), i)
+                          if _is_arraylike(v) else -1
+                          for i, v in enumerate(leaves))
+            key = None
+            if all(k is not None for k in lks):
+                key = (f_id, treedef, tuple(lks), alias) + \
+                    _cfg_key(cfg, cfg.resolved_backend())
+                hit = _PROGRAMS.get(key)
+                if hit is not None and hit[0] is getattr(f, "__func__", f):
+                    _CACHE_STATS["hits"] += 1
+                    return hit[2](leaves)
+
+            r = _Region(name or getattr(f, "__name__", "region"), cfg)
+            argpos = {}
+            for i, v in enumerate(leaves):
+                if _is_arraylike(v):
+                    argpos.setdefault(id(v), i)
+            handles = [r.wrap(v) if _is_arraylike(v) else v for v in leaves]
+            targs, tkwargs = jax.tree_util.tree_unflatten(treedef, handles)
+            stack = _region_stack()
+            stack.append(r)
+            try:
+                out = f(*targs, **tkwargs)
+            except BaseException:
+                r.abandon()
+                raise
+            finally:
+                stack.pop()
+            out_leaves, out_treedef = jax.tree_util.tree_flatten(out)
+            pending = r._pending()
+            if pending:
+                r._run(pending)
+            r.closed = True
+            _maybe_cache_program(key, f, r, pending, out_leaves, out_treedef,
+                                 argpos)
+            return jax.tree_util.tree_map(
+                lambda v: v._concrete if isinstance(v, TracedTensor) else v,
+                out)
+        return wrapper
+    return deco(fn) if fn is not None else deco
+
+
+def _maybe_cache_program(key, f, r: _Region, pending, out_leaves,
+                         out_treedef, argpos) -> None:
+    """Record a replay closure for this call site if the capture was clean:
+    no mid-region flush, every region input came from an argument leaf, and
+    the output pytree is fully reconstructible from (results, arg leaves,
+    hashable constants)."""
+    if key is None or r.segments > 0 or not pending:
+        return
+    binding = []
+    for v in r._inp_vals:
+        j = argpos.get(id(v))
+        if j is None:
+            return          # closure-captured array: can't rebind safely
+        binding.append(j)
+    pend_idx = {id(h): i for i, h in enumerate(pending)}
+    spec = []
+    for lv in out_leaves:
+        if isinstance(lv, TracedTensor):
+            if id(lv) in pend_idx:
+                spec.append(("res", pend_idx[id(lv)]))
+            elif lv._concrete is not None and id(lv._concrete) in argpos:
+                spec.append(("arg", argpos[id(lv._concrete)]))
+            else:
+                return
+        elif _is_arraylike(lv) or isinstance(lv, jax.core.Tracer):
+            return          # stray array/tracer output: don't capture it
+        else:
+            spec.append(("const", lv))
+    fn_c, binding, spec = r._last_fn, tuple(binding), tuple(spec)
+
+    def replay(leaves, fn_c=fn_c, binding=binding, spec=spec,
+               out_treedef=out_treedef):
+        results = fn_c({f"a{i}": leaves[j] for i, j in enumerate(binding)})
+        outs = [results[i] if tag == "res"
+                else leaves[i] if tag == "arg" else i
+                for tag, i in spec]
+        return jax.tree_util.tree_unflatten(out_treedef, outs)
+
+    _PROGRAMS[key] = (getattr(f, "__func__", f),
+                      getattr(f, "__self__", None), replay)
+
+
+def _is_arraylike(v) -> bool:
+    return (not isinstance(v, TracedTensor)
+            and hasattr(v, "shape") and hasattr(v, "dtype"))
+
+
+def lift(fn: Callable, *args, **static):
+    """Record an opaque python composite as ONE region node.
+
+    ``fn(*arrays, **static)`` must be a pure jnp function of its array
+    arguments (norms, RoPE, ...).  Outside a region this just calls ``fn``.
+    Inside, the call becomes a ``pyfunc`` node: the region stays a single
+    graph (single jit, CSE-able) without reimplementing fn's numerics in
+    the IR.  ``fn`` must be a module-level function (its identity is part
+    of the graph signature / cache key)."""
+    reg = _active_region()
+    if reg is None:
+        return fn(*args, **static)
+    nids = [reg.nid_of(a) for a in args]
+    sds = [jax.ShapeDtypeStruct(tuple(reg.g.nodes[n].ttype.shape),
+                                jnp.dtype(reg.g.nodes[n].ttype.dtype))
+           for n in nids]
+    out = jax.eval_shape(functools.partial(fn, **static), *sds)
+    if not isinstance(out, jax.ShapeDtypeStruct):
+        raise TypeError(f"lift({fn.__name__}) must return a single array")
+    out_t = TensorType(tuple(out.shape), str(out.dtype))
+    nid = reg.g.add("pyfunc", tuple(nids), out_t,
+                    fn=fn, static=tuple(sorted(static.items())))
+    return reg.handle(nid)
+
+
+def capture_region(fn: Callable, *args, **kwargs) -> TaskGraph:
+    """Trace ``fn`` under a region and return the RAW merged graph (outputs
+    set, pipeline NOT run, nothing executed) — benchmark/pipeline-timing
+    hook."""
+    r = _Region(getattr(fn, "__name__", "region"), get_config())
+
+    def lift_leaf(v):
+        return r.wrap(v) if _is_arraylike(v) else v
+
+    targs, tkwargs = jax.tree_util.tree_map(lift_leaf, (args, kwargs))
+    stack = _region_stack()
+    stack.append(r)
+    try:
+        out = fn(*targs, **tkwargs)
+    finally:
+        stack.pop()
+    outs = [v for v in jax.tree_util.tree_leaves(out)
+            if isinstance(v, TracedTensor) and v.nid is not None]
+    r.g.set_outputs([h.nid for h in outs])
+    r.abandon()
+    return r.g
+
+
+def trace_region(fn: Callable, *args, **kwargs) -> TaskGraph:
+    """Like :func:`capture_region` but returns the OPTIMIZED graph."""
+    cfg = get_config()
+    g = capture_region(fn, *args, **kwargs)
+    return run_pipeline(g, cfg.mode, cfg.resolved_cost_model(),
+                        cfg.resolved_backend(),
+                        ablate_serialization=cfg.ablate_serialization)
+
+
+# ---------------------------------------------------------------------------
+# Shared graph builders (used by both the eager per-op path and the region
+# tracer — one source of truth for each op's fork-join structure)
+# ---------------------------------------------------------------------------
+
+
+def _pd(t: TensorType) -> tuple[int, ...]:
+    return tuple(range(len(t.shape)))
+
+
+def _build_linear(g: TaskGraph, xi: int, wi: int, bi: Optional[int],
+                  ri: Optional[int], activation: Optional[str]) -> int:
+    x_t, w_t = g.nodes[xi].ttype, g.nodes[wi].ttype
+    out_t = TensorType(tuple(x_t.shape[:-1]) + (w_t.shape[-1],), x_t.dtype)
+    k = x_t.shape[-1]
+    head = g.add("matmul", (xi, wi), out_t, pdims=_pd(out_t),
+                 rdims=(("k", k),), k=k)
+    if bi is not None:
+        head = g.add("ew", (head, bi), out_t, pdims=_pd(out_t), fn="add")
+    if activation is not None:
+        head = g.add("ew", (head,), out_t, pdims=_pd(out_t), fn=activation)
+    if ri is not None:
+        head = g.add("ew", (head, ri), out_t, pdims=_pd(out_t), fn="add")
+    return head
+
+
+def _build_multi_linear(g: TaskGraph, xi: int, wis: Sequence[int],
+                        bis: Sequence[Optional[int]]) -> list[int]:
+    x_t = g.nodes[xi].ttype
+    k = x_t.shape[-1]
+    outs = []
+    for wi, bi in zip(wis, bis):
+        w_t = g.nodes[wi].ttype
+        out_t = TensorType(tuple(x_t.shape[:-1]) + (w_t.shape[-1],), x_t.dtype)
+        mm = g.add("matmul", (xi, wi), out_t, pdims=_pd(out_t),
+                   rdims=(("k", k),), k=k)
+        if bi is not None:
+            mm = g.add("ew", (mm, bi), out_t, pdims=_pd(out_t), fn="add")
+        outs.append(mm)
+    return outs
+
+
+def _build_gated_mlp(g: TaskGraph, xi: int, wgi: int, wui: int, wdi: int,
+                     activation: str) -> int:
+    x_t = g.nodes[xi].ttype
+    f = g.nodes[wgi].ttype.shape[-1]
+    hid_t = TensorType(tuple(x_t.shape[:-1]) + (f,), x_t.dtype)
+    k = x_t.shape[-1]
+    mg = g.add("matmul", (xi, wgi), hid_t, pdims=_pd(hid_t),
+               rdims=(("k", k),), k=k)
+    mu = g.add("matmul", (xi, wui), hid_t, pdims=_pd(hid_t),
+               rdims=(("k", k),), k=k)
+    act = g.add("ew", (mg,), hid_t, pdims=_pd(hid_t), fn=activation)
+    prod = g.add("ew", (act, mu), hid_t, pdims=_pd(hid_t), fn="mul")
+    out_t = TensorType(tuple(x_t.shape[:-1]) +
+                       (g.nodes[wdi].ttype.shape[-1],), x_t.dtype)
+    return g.add("matmul", (prod, wdi), out_t, pdims=_pd(out_t),
+                 rdims=(("k", f),), k=f)
+
+
+def _build_attention(g: TaskGraph, qi: int, ki: int, vi: int,
+                     biasi: Optional[int], causal: bool) -> int:
+    q_t, k_t = g.nodes[qi].ttype, g.nodes[ki].ttype
+    ins = [qi, ki, vi] + ([biasi] if biasi is not None else [])
+    out_t = TensorType(tuple(q_t.shape), q_t.dtype)
+    b, s, h, d = q_t.shape
+    return g.add("attention", tuple(ins), out_t, pdims=(0, 1, 2),
+                 rdims=(("kv", k_t.shape[1]),),
+                 causal=causal, q_shape=(b, s, h, d), kv_len=k_t.shape[1],
+                 kv_heads=k_t.shape[2])
+
+
+def _build_wkv_scan(g: TaskGraph, qi: int, ki: int, vi: int, wi: int,
+                    ui: Optional[int]) -> int:
+    q_t, v_t = g.nodes[qi].ttype, g.nodes[vi].ttype
+    ins = [qi, ki, vi, wi] + ([ui] if ui is not None else [])
+    out_t = TensorType(tuple(v_t.shape), v_t.dtype)
+    return g.add("linear_scan", tuple(ins), out_t, pdims=(0, 2),
+                 rdims=(("seq", q_t.shape[1]),), seq=q_t.shape[1],
+                 variant="rwkv6" if ui is not None else "gla")
+
+
+def _build_expert_mlp(g: TaskGraph, xi: int, wgi: int, wui: int, wdi: int,
+                      activation: str) -> int:
+    E, C, d = g.nodes[xi].ttype.shape
+    dt = g.nodes[xi].ttype.dtype
+    f = g.nodes[wgi].ttype.shape[-1]
+    hid_t = TensorType((E, C, f), dt)
+    mg = g.add("matmul", (xi, wgi), hid_t, pdims=(0, 1, 2),
+               rdims=(("k", d),), k=d)
+    mu = g.add("matmul", (xi, wui), hid_t, pdims=(0, 1, 2),
+               rdims=(("k", d),), k=d)
+    act = g.add("ew", (mg,), hid_t, pdims=(0, 1, 2), fn=activation)
+    prod = g.add("ew", (act, mu), hid_t, pdims=(0, 1, 2), fn="mul")
+    out_t = TensorType((E, C, d), dt)
+    return g.add("matmul", (prod, wdi), out_t, pdims=(0, 1, 2),
+                 rdims=(("k", f),), k=f)
+
+
+def _build_lstm_step(g: TaskGraph, xi: int, hi: int, ci: int, Wi: int,
+                     bi: int) -> tuple[int, int]:
+    x_t, h_t = g.nodes[xi].ttype, g.nodes[hi].ttype
+    W_t, b_t0 = g.nodes[Wi].ttype, g.nodes[bi].ttype
+    xd, hd = x_t.shape[-1], h_t.shape[-1]
+    B = x_t.shape[0]
+    gate_t = TensorType((B, hd), x_t.dtype)
+    Wx_t = TensorType((xd, hd), W_t.dtype)
+    Wh_t = TensorType((hd, hd), W_t.dtype)
+    bg_t = TensorType((hd,), b_t0.dtype)
+    gates = []
+    for gi in range(4):
+        wx = g.add("slice", (Wi,), TensorType((xd, 4 * hd), W_t.dtype),
+                   pdims=(0, 1), axis=0, start=0, limit=xd)
+        wx = g.add("slice", (wx,), Wx_t, pdims=(0, 1), axis=1,
+                   start=gi * hd, limit=(gi + 1) * hd)
+        wh = g.add("slice", (Wi,), TensorType((hd, 4 * hd), W_t.dtype),
+                   pdims=(0, 1), axis=0, start=xd, limit=xd + hd)
+        wh = g.add("slice", (wh,), Wh_t, pdims=(0, 1), axis=1,
+                   start=gi * hd, limit=(gi + 1) * hd)
+        bg = g.add("slice", (bi,), bg_t, pdims=(0,), axis=0,
+                   start=gi * hd, limit=(gi + 1) * hd)
+        mx = g.add("matmul", (xi, wx), gate_t, pdims=(0, 1),
+                   rdims=(("k", xd),), k=xd)
+        mh = g.add("matmul", (hi, wh), gate_t, pdims=(0, 1),
+                   rdims=(("k", hd),), k=hd)
+        s = g.add("ew", (mx, mh), gate_t, pdims=(0, 1), fn="add")
+        s = g.add("ew", (s, bg), gate_t, pdims=(0, 1), fn="add")
+        gates.append(s)
+    i_g = g.add("ew", (gates[0],), gate_t, pdims=(0, 1), fn="sigmoid")
+    f_g = g.add("ew", (gates[1],), gate_t, pdims=(0, 1), fn="sigmoid")
+    g_g = g.add("ew", (gates[2],), gate_t, pdims=(0, 1), fn="tanh")
+    o_g = g.add("ew", (gates[3],), gate_t, pdims=(0, 1), fn="sigmoid")
+    fc = g.add("ew", (f_g, ci), gate_t, pdims=(0, 1), fn="mul")
+    ig = g.add("ew", (i_g, g_g), gate_t, pdims=(0, 1), fn="mul")
+    c2 = g.add("ew", (fc, ig), gate_t, pdims=(0, 1), fn="add")
+    tc = g.add("ew", (c2,), gate_t, pdims=(0, 1), fn="tanh")
+    h2 = g.add("ew", (o_g, tc), gate_t, pdims=(0, 1), fn="mul")
+    return h2, c2
+
+
+def _build_conv2d(g: TaskGraph, xi: int, ki: int, bi: Optional[int],
+                  strides: tuple, padding: str,
+                  activation: Optional[str]) -> int:
+    x_t, k_t = g.nodes[xi].ttype, g.nodes[ki].ttype
+    B, H, Wd, _ = x_t.shape
+    kh, kw, cin, co = k_t.shape
+    if padding == "SAME":
+        ho, wo = -(-H // strides[0]), -(-Wd // strides[1])
+    else:
+        ho = (H - kh) // strides[0] + 1
+        wo = (Wd - kw) // strides[1] + 1
+    out_t = TensorType((B, ho, wo, co), x_t.dtype)
+    head = g.add("conv2d", (xi, ki), out_t, pdims=(0, 1, 2, 3),
+                 rdims=(("k", kh * kw * cin),),
+                 strides=strides, padding=padding, k_elems=kh * kw * cin)
+    if bi is not None:
+        head = g.add("ew", (head, bi), out_t, pdims=(0, 1, 2, 3), fn="add")
+    if activation:
+        head = g.add("ew", (head,), out_t, pdims=(0, 1, 2, 3), fn=activation)
+    return head
+
+
+# ---------------------------------------------------------------------------
 # Ops
 # ---------------------------------------------------------------------------
 
 
 def linear(x, w, b=None, activation: Optional[str] = None, residual=None):
     """y = act(x @ w + b) (+ residual).  Library GEMM with open epilogue."""
+    reg = _active_region()
+    if reg is not None:
+        head = _build_linear(reg.g, reg.nid_of(x), reg.nid_of(w),
+                             None if b is None else reg.nid_of(b),
+                             None if residual is None else reg.nid_of(residual),
+                             activation)
+        return reg.handle(head)
+
     sig = ("linear", x.shape, str(x.dtype), w.shape, str(w.dtype),
            b is not None, activation, residual is not None)
     inputs = {"x": x, "w": w}
@@ -130,21 +817,9 @@ def linear(x, w, b=None, activation: Optional[str] = None, residual=None):
     def build(g: TaskGraph):
         xi = g.add_input("x", _tt(x))
         wi = g.add_input("w", _tt(w))
-        out_t = TensorType(tuple(x.shape[:-1]) + (w.shape[-1],), str(x.dtype))
-        ndim = len(out_t.shape)
-        mm = g.add("matmul", (xi, wi), out_t, pdims=tuple(range(ndim)),
-                   rdims=(("k", x.shape[-1]),), k=x.shape[-1])
-        head = mm
-        if b is not None:
-            bi = g.add_input("b", _tt(b))
-            head = g.add("ew", (head, bi), out_t, pdims=tuple(range(ndim)), fn="add")
-        if activation is not None:
-            head = g.add("ew", (head,), out_t, pdims=tuple(range(ndim)),
-                         fn=activation)
-        if residual is not None:
-            ri = g.add_input("res", _tt(residual))
-            head = g.add("ew", (head, ri), out_t, pdims=tuple(range(ndim)), fn="add")
-        g.set_outputs([head])
+        bi = g.add_input("b", _tt(b)) if b is not None else None
+        ri = g.add_input("res", _tt(residual)) if residual is not None else None
+        g.set_outputs([_build_linear(g, xi, wi, bi, ri, activation)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -153,6 +828,13 @@ def multi_linear(x, ws: Sequence, bs: Optional[Sequence] = None):
     """k projections of the same activation (Q,K,V[,G]).  In tapir mode the
     shared-input fusion pass turns these into ONE wide GEMM + slices."""
     bs = list(bs) if bs is not None else [None] * len(ws)
+    reg = _active_region()
+    if reg is not None:
+        outs = _build_multi_linear(
+            reg.g, reg.nid_of(x), [reg.nid_of(w) for w in ws],
+            [None if b is None else reg.nid_of(b) for b in bs])
+        return tuple(reg.handle(o) for o in outs)
+
     sig = ("multi_linear", x.shape, str(x.dtype),
            tuple(w.shape for w in ws), tuple(b is not None for b in bs))
     inputs = {"x": x}
@@ -164,18 +846,10 @@ def multi_linear(x, ws: Sequence, bs: Optional[Sequence] = None):
 
     def build(g: TaskGraph):
         xi = g.add_input("x", _tt(x))
-        outs = []
-        for i, w in enumerate(ws):
-            wi = g.add_input(f"w{i}", _tt(w))
-            out_t = TensorType(tuple(x.shape[:-1]) + (w.shape[-1],), str(x.dtype))
-            ndim = len(out_t.shape)
-            mm = g.add("matmul", (xi, wi), out_t, pdims=tuple(range(ndim)),
-                       rdims=(("k", x.shape[-1]),), k=x.shape[-1])
-            if bs[i] is not None:
-                bi = g.add_input(f"b{i}", _tt(bs[i]))
-                mm = g.add("ew", (mm, bi), out_t, pdims=tuple(range(ndim)), fn="add")
-            outs.append(mm)
-        g.set_outputs(outs)
+        wis = [g.add_input(f"w{i}", _tt(w)) for i, w in enumerate(ws)]
+        bis = [g.add_input(f"b{i}", _tt(b)) if b is not None else None
+               for i, b in enumerate(bs)]
+        g.set_outputs(_build_multi_linear(g, xi, wis, bis))
 
     return _execute(sig, build, inputs)
 
@@ -183,6 +857,13 @@ def multi_linear(x, ws: Sequence, bs: Optional[Sequence] = None):
 def gated_mlp(x, w_gate, w_up, w_down, activation: str = "silu"):
     """SwiGLU MLP: down( act(x@w_gate) * (x@w_up) ).  Gate/up share input ->
     fused into one GEMM; the mul and the down-proj epilogue fuse too."""
+    reg = _active_region()
+    if reg is not None:
+        out = _build_gated_mlp(reg.g, reg.nid_of(x), reg.nid_of(w_gate),
+                               reg.nid_of(w_up), reg.nid_of(w_down),
+                               activation)
+        return reg.handle(out)
+
     sig = ("gated_mlp", x.shape, str(x.dtype), w_gate.shape, w_down.shape,
            activation)
     inputs = {"x": x, "wg": w_gate, "wu": w_up, "wd": w_down}
@@ -192,19 +873,7 @@ def gated_mlp(x, w_gate, w_up, w_down, activation: str = "silu"):
         wg = g.add_input("wg", _tt(w_gate))
         wu = g.add_input("wu", _tt(w_up))
         wd = g.add_input("wd", _tt(w_down))
-        hid_t = TensorType(tuple(x.shape[:-1]) + (w_gate.shape[-1],), str(x.dtype))
-        nd = len(hid_t.shape)
-        k = x.shape[-1]
-        mg = g.add("matmul", (xi, wg), hid_t, pdims=tuple(range(nd)),
-                   rdims=(("k", k),), k=k)
-        mu = g.add("matmul", (xi, wu), hid_t, pdims=tuple(range(nd)),
-                   rdims=(("k", k),), k=k)
-        act = g.add("ew", (mg,), hid_t, pdims=tuple(range(nd)), fn=activation)
-        prod = g.add("ew", (act, mu), hid_t, pdims=tuple(range(nd)), fn="mul")
-        out_t = TensorType(tuple(x.shape[:-1]) + (w_down.shape[-1],), str(x.dtype))
-        mm = g.add("matmul", (prod, wd), out_t, pdims=tuple(range(nd)),
-                   rdims=(("k", w_gate.shape[-1]),), k=w_gate.shape[-1])
-        g.set_outputs([mm])
+        g.set_outputs([_build_gated_mlp(g, xi, wg, wu, wd, activation)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -212,6 +881,14 @@ def gated_mlp(x, w_gate, w_up, w_down, activation: str = "silu"):
 def attention(q, k, v, causal: bool = False, bias=None):
     """Multi-head attention library op.  q:[B,Sq,Hq,D] k/v:[B,Skv,Hkv,D].
     GQA is implicit (Hq a multiple of Hkv)."""
+    reg = _active_region()
+    if reg is not None:
+        out = _build_attention(reg.g, reg.nid_of(q), reg.nid_of(k),
+                               reg.nid_of(v),
+                               None if bias is None else reg.nid_of(bias),
+                               causal)
+        return reg.handle(out)
+
     sig = ("attention", q.shape, k.shape, str(q.dtype), causal, bias is not None)
     inputs = {"q": q, "k": k, "v": v}
     if bias is not None:
@@ -221,16 +898,8 @@ def attention(q, k, v, causal: bool = False, bias=None):
         qi = g.add_input("q", _tt(q))
         ki = g.add_input("k", _tt(k))
         vi = g.add_input("v", _tt(v))
-        ins = [qi, ki, vi]
-        if bias is not None:
-            ins.append(g.add_input("bias", _tt(bias)))
-        out_t = TensorType(tuple(q.shape), str(q.dtype))
-        b, s, h, d = q.shape
-        att = g.add("attention", tuple(ins), out_t, pdims=(0, 1, 2),
-                    rdims=(("kv", k.shape[1]),),
-                    causal=causal, q_shape=(b, s, h, d), kv_len=k.shape[1],
-                    kv_heads=k.shape[2])
-        g.set_outputs([att])
+        bi = g.add_input("bias", _tt(bias)) if bias is not None else None
+        g.set_outputs([_build_attention(g, qi, ki, vi, bi, causal)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -239,6 +908,13 @@ def wkv_scan(q, k, v, w, u=None):
     """Gated linear-attention scan:  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
     o_t = q_t S_t (+ u * (q_t . k_t) v_t bonus when u given — RWKV6).
     q/k/w: [B,S,H,Dk], v: [B,S,H,Dv], u: [H,Dk] or None."""
+    reg = _active_region()
+    if reg is not None:
+        out = _build_wkv_scan(reg.g, reg.nid_of(q), reg.nid_of(k),
+                              reg.nid_of(v), reg.nid_of(w),
+                              None if u is None else reg.nid_of(u))
+        return reg.handle(out)
+
     sig = ("wkv_scan", q.shape, v.shape, str(q.dtype), u is not None)
     inputs = {"q": q, "k": k, "v": v, "w": w}
     if u is not None:
@@ -247,13 +923,8 @@ def wkv_scan(q, k, v, w, u=None):
     def build(g: TaskGraph):
         ins = [g.add_input(n, _tt(t)) for n, t in
                (("q", q), ("k", k), ("v", v), ("w", w))]
-        if u is not None:
-            ins.append(g.add_input("u", _tt(u)))
-        out_t = TensorType(tuple(v.shape), str(v.dtype))
-        node = g.add("linear_scan", tuple(ins), out_t, pdims=(0, 2),
-                     rdims=(("seq", q.shape[1]),), seq=q.shape[1],
-                     variant="rwkv6" if u is not None else "gla")
-        g.set_outputs([node])
+        ui = g.add_input("u", _tt(u)) if u is not None else None
+        g.set_outputs([_build_wkv_scan(g, *ins, ui)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -262,6 +933,13 @@ def expert_mlp(xe, w_gate, w_up, w_down, activation: str = "silu"):
     """Batched expert FFN: xe [E,C,d] x w [E,d,f].  In opaque mode the
     batched GEMMs lower to per-expert library calls; in tapir mode a single
     grouped einsum with fused epilogues."""
+    reg = _active_region()
+    if reg is not None:
+        out = _build_expert_mlp(reg.g, reg.nid_of(xe), reg.nid_of(w_gate),
+                                reg.nid_of(w_up), reg.nid_of(w_down),
+                                activation)
+        return reg.handle(out)
+
     sig = ("expert_mlp", xe.shape, str(xe.dtype), w_gate.shape, w_down.shape,
            activation)
     inputs = {"x": xe, "wg": w_gate, "wu": w_up, "wd": w_down}
@@ -271,19 +949,7 @@ def expert_mlp(xe, w_gate, w_up, w_down, activation: str = "silu"):
         wg = g.add_input("wg", _tt(w_gate))
         wu = g.add_input("wu", _tt(w_up))
         wd = g.add_input("wd", _tt(w_down))
-        E, C, d = xe.shape
-        f = w_gate.shape[-1]
-        hid_t = TensorType((E, C, f), str(xe.dtype))
-        mg = g.add("matmul", (xi, wg), hid_t, pdims=(0, 1, 2),
-                   rdims=(("k", d),), k=d)
-        mu = g.add("matmul", (xi, wu), hid_t, pdims=(0, 1, 2),
-                   rdims=(("k", d),), k=d)
-        act = g.add("ew", (mg,), hid_t, pdims=(0, 1, 2), fn=activation)
-        prod = g.add("ew", (act, mu), hid_t, pdims=(0, 1, 2), fn="mul")
-        out_t = TensorType((E, C, d), str(xe.dtype))
-        mm = g.add("matmul", (prod, wd), out_t, pdims=(0, 1, 2),
-                   rdims=(("k", f),), k=f)
-        g.set_outputs([mm])
+        g.set_outputs([_build_expert_mlp(g, xi, wg, wu, wd, activation)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -296,7 +962,12 @@ def lstm_step(x, h, c, W, b):
     parallelism.  In tapir mode the pipeline (CSE + added-GEMM fusion +
     shared-input fusion) collapses them into ONE GEMM; in opaque mode they
     stay eight isolated library calls.  Returns (h', c')."""
-    xd, hd = x.shape[-1], h.shape[-1]
+    reg = _active_region()
+    if reg is not None:
+        h2, c2 = _build_lstm_step(reg.g, reg.nid_of(x), reg.nid_of(h),
+                                  reg.nid_of(c), reg.nid_of(W), reg.nid_of(b))
+        return reg.handle(h2), reg.handle(c2)
+
     sig = ("lstm_step", x.shape, str(x.dtype), W.shape)
     inputs = {"x": x, "h": h, "c": c, "W": W, "b": b}
 
@@ -306,40 +977,7 @@ def lstm_step(x, h, c, W, b):
         ci = g.add_input("c", _tt(c))
         Wi = g.add_input("W", _tt(W))
         bi = g.add_input("b", _tt(b))
-        B = x.shape[0]
-        gate_t = TensorType((B, hd), str(x.dtype))
-        Wx_t = TensorType((xd, hd), str(W.dtype))
-        Wh_t = TensorType((hd, hd), str(W.dtype))
-        b_t = TensorType((hd,), str(b.dtype))
-        gates = []
-        for gi in range(4):
-            wx = g.add("slice", (Wi,), TensorType((xd, 4 * hd), str(W.dtype)),
-                       pdims=(0, 1), axis=0, start=0, limit=xd)
-            wx = g.add("slice", (wx,), Wx_t, pdims=(0, 1), axis=1,
-                       start=gi * hd, limit=(gi + 1) * hd)
-            wh = g.add("slice", (Wi,), TensorType((hd, 4 * hd), str(W.dtype)),
-                       pdims=(0, 1), axis=0, start=xd, limit=xd + hd)
-            wh = g.add("slice", (wh,), Wh_t, pdims=(0, 1), axis=1,
-                       start=gi * hd, limit=(gi + 1) * hd)
-            bg = g.add("slice", (bi,), b_t, pdims=(0,), axis=0,
-                       start=gi * hd, limit=(gi + 1) * hd)
-            mx = g.add("matmul", (xi, wx), gate_t, pdims=(0, 1),
-                       rdims=(("k", xd),), k=xd)
-            mh = g.add("matmul", (hi, wh), gate_t, pdims=(0, 1),
-                       rdims=(("k", hd),), k=hd)
-            s = g.add("ew", (mx, mh), gate_t, pdims=(0, 1), fn="add")
-            s = g.add("ew", (s, bg), gate_t, pdims=(0, 1), fn="add")
-            gates.append(s)
-        i_g = g.add("ew", (gates[0],), gate_t, pdims=(0, 1), fn="sigmoid")
-        f_g = g.add("ew", (gates[1],), gate_t, pdims=(0, 1), fn="sigmoid")
-        g_g = g.add("ew", (gates[2],), gate_t, pdims=(0, 1), fn="tanh")
-        o_g = g.add("ew", (gates[3],), gate_t, pdims=(0, 1), fn="sigmoid")
-        fc = g.add("ew", (f_g, ci), gate_t, pdims=(0, 1), fn="mul")
-        ig = g.add("ew", (i_g, g_g), gate_t, pdims=(0, 1), fn="mul")
-        c2 = g.add("ew", (fc, ig), gate_t, pdims=(0, 1), fn="add")
-        tc = g.add("ew", (c2,), gate_t, pdims=(0, 1), fn="tanh")
-        h2 = g.add("ew", (o_g, tc), gate_t, pdims=(0, 1), fn="mul")
-        g.set_outputs([h2, c2])
+        g.set_outputs(list(_build_lstm_step(g, xi, hi, ci, Wi, bi)))
 
     h2, c2 = _execute(sig, build, inputs)
     return h2, c2
@@ -348,6 +986,13 @@ def lstm_step(x, h, c, W, b):
 def conv2d(x, kern, b=None, strides=(1, 1), padding="SAME",
            activation: Optional[str] = None):
     """NHWC conv library op with open epilogue."""
+    reg = _active_region()
+    if reg is not None:
+        out = _build_conv2d(reg.g, reg.nid_of(x), reg.nid_of(kern),
+                            None if b is None else reg.nid_of(b),
+                            tuple(strides), padding, activation)
+        return reg.handle(out)
+
     sig = ("conv2d", x.shape, str(x.dtype), kern.shape, strides, padding,
            b is not None, activation)
     inputs = {"x": x, "k": kern}
@@ -357,25 +1002,9 @@ def conv2d(x, kern, b=None, strides=(1, 1), padding="SAME",
     def build(g: TaskGraph):
         xi = g.add_input("x", _tt(x))
         ki = g.add_input("k", _tt(kern))
-        B, H, Wd, _ = x.shape
-        kh, kw, _, co = kern.shape
-        if padding == "SAME":
-            ho, wo = -(-H // strides[0]), -(-Wd // strides[1])
-        else:
-            ho = (H - kh) // strides[0] + 1
-            wo = (Wd - kw) // strides[1] + 1
-        out_t = TensorType((B, ho, wo, co), str(x.dtype))
-        cv = g.add("conv2d", (xi, ki), out_t, pdims=(0, 1, 2, 3),
-                   rdims=(("k", kh * kw * kern.shape[2]),),
-                   strides=strides, padding=padding,
-                   k_elems=kh * kw * kern.shape[2])
-        head = cv
-        if b is not None:
-            bi = g.add_input("b", _tt(b))
-            head = g.add("ew", (head, bi), out_t, pdims=(0, 1, 2, 3), fn="add")
-        if activation:
-            head = g.add("ew", (head,), out_t, pdims=(0, 1, 2, 3), fn=activation)
-        g.set_outputs([head])
+        bi = g.add_input("b", _tt(b)) if b is not None else None
+        g.set_outputs([_build_conv2d(g, xi, ki, bi, tuple(strides), padding,
+                                     activation)])
 
     return _execute(sig, build, inputs)[0]
 
@@ -420,6 +1049,13 @@ def cache_stats() -> dict:
     return dict(_CACHE_STATS, size=len(_CACHE))
 
 
+def cached_graphs() -> dict[tuple, TaskGraph]:
+    """Optimized TaskGraphs by cache key (introspection for tests/bench)."""
+    return dict(_GRAPHS)
+
+
 def clear_cache() -> None:
     _CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    _GRAPHS.clear()
+    _PROGRAMS.clear()
+    _CACHE_STATS.update(hits=0, misses=0, pipeline_s=0.0)

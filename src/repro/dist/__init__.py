@@ -1,0 +1,40 @@
+"""Distribution layer: logical-axis sharding rules, activation sharding
+constraints, and the fault-tolerant training loop.
+
+Everything here is **single-device safe**: with no mesh active (or a
+one-device mesh) every function degrades to the identity, so smoke tests
+and the CPU container run the exact same model code as a TPU pod.
+
+``shard_act(x, *logical_axes)`` is the model-side entry point: it attaches
+a sharding constraint mapping logical axis names ("batch", "heads", ...)
+to mesh axes via the rules in :mod:`repro.dist.sharding`.  Inside an open
+``tapir`` region it is a pass-through — sharding constraints are a
+lowering concern and regions re-apply them at emission.
+"""
+from __future__ import annotations
+
+from . import compat  # noqa: F401  (installs jax.set_mesh shim on old jax)
+from .sharding import (batch_pspec, configure_rules, current_mesh,
+                       logical_to_pspec, param_shardings)
+
+
+def shard_act(x, *logical_axes):
+    """Constrain activation ``x``'s sharding by logical axis names.
+
+    No-op when: no mesh is active, the mesh is a single device, or ``x`` is
+    a lazy region handle (TracedTensor)."""
+    from repro.core.tapir import is_traced
+    if is_traced(x):
+        return x
+    mesh = current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = logical_to_pspec(logical_axes, mesh, shape=tuple(x.shape))
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    except ValueError:
+        # outside a jit trace on some jax versions; constraint is advisory
+        return x

@@ -1,0 +1,60 @@
+"""Compatibility shims for older jax releases (the container pins 0.4.x).
+
+Newer call sites (tests, launch scripts) use ``jax.set_mesh(mesh)`` as a
+context manager and ``jax.make_mesh(..., axis_types=...)``.  On jax
+versions that predate those APIs we install equivalents:
+
+* ``jax.set_mesh`` — context manager that records the mesh as the ambient
+  mesh (read back by :func:`repro.dist.sharding.current_mesh`) and enters
+  the ``Mesh`` python context so legacy pjit-style code sees it too.
+
+The shim is only installed when the attribute is missing, so on current
+jax this module is a no-op.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+
+_tls = threading.local()
+
+
+def ambient_mesh():
+    """Mesh set via the set_mesh shim (None when unset or on real jax)."""
+    return getattr(_tls, "mesh", None)
+
+
+@contextmanager
+def _set_mesh(mesh):
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _tls.mesh = prev
+
+
+if not hasattr(jax, "set_mesh"):
+    jax.set_mesh = _set_mesh
+
+
+if not hasattr(jax.sharding, "AxisType"):
+    import enum
+
+    class _AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType
+
+    _real_make_mesh = jax.make_mesh
+
+    def _make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        # old jax has no axis_types kwarg; Auto is its only behaviour anyway
+        return _real_make_mesh(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = _make_mesh

@@ -1,0 +1,110 @@
+"""Fault tolerance: checkpoint-replay training loop + straggler detection.
+
+``FaultTolerantLoop`` wraps a jitted step function with the restore-and-
+replay protocol: on a (detected or injected) failure it restores the
+latest checkpoint and replays forward — because the data pipeline is
+deterministic in the step index (``batch_at(step)``), replay reproduces
+the clean trajectory bit-for-bit.  Persistent failures at the same step
+give up after ``max_retries`` attempts.
+
+``StragglerWatchdog`` keeps a rolling window of step durations and flags
+steps slower than ``threshold`` x the median — the host-side signal a
+production deployment uses to evict slow workers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class LoopStats:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    losses: list = field(default_factory=list)
+    straggler_steps: list = field(default_factory=list)
+
+
+class FaultTolerantLoop:
+    def __init__(self, step_fn: Callable, ckpt, batch_at: Callable,
+                 inject_failure: Optional[Callable[[int], bool]] = None,
+                 max_retries: int = 3, state_shardings=None,
+                 straggler_threshold: float = 4.0):
+        self.step_fn = step_fn
+        self.ckpt = ckpt                # CheckpointManager
+        self.batch_at = batch_at
+        self.inject_failure = inject_failure
+        self.max_retries = max_retries
+        self.state_shardings = state_shardings   # restore-time device_put
+        self.watchdog = StragglerWatchdog(threshold=straggler_threshold)
+
+    def run(self, state, start_step: int, end_step: int):
+        import time
+        stats = LoopStats()
+        init_state = state              # arrays are immutable; safe snapshot
+        fail_count: dict[int, int] = {}
+        step = start_step
+        while step < end_step:
+            if self.inject_failure is not None and self.inject_failure(step):
+                stats.failures += 1
+                fail_count[step] = fail_count.get(step, 0) + 1
+                if fail_count[step] >= self.max_retries:
+                    raise RuntimeError(
+                        f"step {step} failed {fail_count[step]} times; "
+                        "giving up")
+                state, step = self._restore(init_state, start_step, stats)
+                continue
+            batch = self.batch_at(step)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            if "loss" in metrics:
+                stats.losses.append(float(metrics["loss"]))
+            if self.watchdog.observe(step, time.perf_counter() - t0):
+                stats.straggler_steps.append(step)
+            stats.steps_run += 1
+            step += 1
+            self.ckpt.maybe_save(step, state)
+        self.ckpt.wait()
+        return state, stats
+
+    def _restore(self, init_state, start_step: int, stats: LoopStats):
+        try:
+            state, ck_step, _ = self.ckpt.restore_latest(
+                init_state, shardings=self.state_shardings)
+            stats.restores += 1
+            return state, ck_step
+        except FileNotFoundError:
+            # nothing checkpointed yet: replay from the beginning
+            return init_state, start_step
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x the rolling median."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 256):
+        self.threshold = threshold
+        self.window = window
+        self._durations: list[float] = []
+        self.flagged: list[int] = []
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        hist = self._durations[-self.window:]
+        slow = bool(hist) and duration_s > self.threshold * float(
+            np.median(hist))
+        self._durations.append(duration_s)
+        self._durations = self._durations[-self.window:]
+        if slow:
+            self.flagged.append(step)
+        return slow
+
+    @property
+    def p50(self) -> float:
+        return float(np.median(self._durations)) if self._durations else 0.0
+
+    @property
+    def p95(self) -> float:
+        return float(np.percentile(self._durations, 95)) \
+            if self._durations else 0.0

@@ -15,22 +15,27 @@ from __future__ import annotations
 
 import jax
 
+import repro.dist.compat  # noqa: F401  (jax.set_mesh shim on old jax)
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh, passing axis_types=Auto only where the installed jax
+    supports it (the kwarg and AxisType arrived after 0.4.x)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh over whatever devices exist (tests use
     XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -1,13 +1,22 @@
 """Shared layer primitives (norms, RoPE, shifts) — pure jnp; the GEMM-heavy
-paths live behind ``repro.core.tapir`` ops."""
+paths live behind ``repro.core.tapir`` ops.
+
+Inside an open ``tapir`` region the norm/RoPE entry points dispatch through
+``tapir.lift``: the very same jnp function becomes ONE opaque node of the
+region graph (identical numerics), so a whole attention+MLP block captures
+as a single TaskGraph instead of breaking at every norm."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import tapir
+
 
 def rmsnorm(x, scale, eps: float = 1e-6):
+    if tapir.is_traced(x) or tapir.is_traced(scale):
+        return tapir.lift(rmsnorm, x, scale, eps=eps)
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
@@ -15,6 +24,10 @@ def rmsnorm(x, scale, eps: float = 1e-6):
 
 
 def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    if tapir.is_traced(x) or tapir.is_traced(scale):
+        if bias is None:
+            return tapir.lift(layernorm, x, scale, eps=eps)
+        return tapir.lift(layernorm, x, scale, bias, eps=eps)
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
@@ -46,6 +59,8 @@ def rope_table(positions, head_dim: int, base: float = 10000.0,
 def apply_rope(x, cos, sin, fraction: float = 1.0):
     """x: [B,S,H,D].  chatglm-style '2d/half' rope passes fraction=0.5:
     only the first half of head dims rotates, the rest pass through."""
+    if tapir.is_traced(x) or tapir.is_traced(cos):
+        return tapir.lift(apply_rope, x, cos, sin, fraction=fraction)
     d = x.shape[-1]
     rot = int(d * fraction) // 2 * 2
     xr, xp = x[..., :rot], x[..., rot:]

@@ -60,12 +60,21 @@ class PaperCNN:
         h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
         h = h.reshape(h.shape[0], -1)
-        h = tapir.linear(h, params["w3"], params["b3"], activation="gelu")
-        return tapir.linear(h, params["w4"], params["b4"])
+        return _cnn_fc_head(h, params["w3"], params["b3"],
+                            params["w4"], params["b4"])
 
     def loss(self, params, batch):
         logits = self.forward(params, batch["x"])
         return _xent(logits, batch["y"])
+
+
+@tapir.parallel_region
+def _cnn_fc_head(h, w3, b3, w4, b4):
+    # module-level so the program cache keys stably on the call site: both
+    # FC layers capture into one region graph (gelu + bias-adds fuse into
+    # the GEMM epilogues) and repeat calls replay without re-tracing
+    h = tapir.linear(h, w3, b3, activation="gelu")
+    return tapir.linear(h, w4, b4)
 
 
 # ---------------------------------------------------------------------------
@@ -174,8 +183,7 @@ class PaperNCF:
         gmf = jnp.take(params["ug"], users, 0) * jnp.take(params["ig"], items, 0)
         h = jnp.concatenate([jnp.take(params["um"], users, 0),
                              jnp.take(params["im"], items, 0)], axis=-1)
-        for lp in params["mlp"]:
-            h = tapir.linear(h, lp["w"], lp["b"], activation="relu")
+        h = _ncf_mlp_tower(h, params["mlp"])
         z = jnp.concatenate([gmf, h], axis=-1)
         return tapir.linear(z, params["out_w"], params["out_b"])[..., 0]
 
@@ -184,6 +192,16 @@ class PaperNCF:
         y = batch["y"].astype(jnp.float32)
         return jnp.mean(jnp.maximum(logit, 0) - logit * y +
                         jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+@tapir.parallel_region
+def _ncf_mlp_tower(h, mlp_params):
+    # module-level for stable program-cache keys: the whole MLP tower is
+    # one region — every relu folds into its GEMM's epilogue and the tower
+    # runs as a single jit call, replayed without re-tracing
+    for lp in mlp_params:
+        h = tapir.linear(h, lp["w"], lp["b"], activation="relu")
+    return h
 
 
 def _xent(logits, labels):

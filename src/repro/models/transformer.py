@@ -104,10 +104,21 @@ class DenseLM(BaseModel):
         return L.rmsnorm(x, scale) if self.cfg.norm == "rmsnorm" \
             else L.layernorm(x, scale)
 
-    def _block(self, p, x, cos, sin):
+    def _block_body(self, p, x, cos, sin):
         a, _ = self._attn(p, self._norm(x, p["ln1"]), cos, sin)
         x = x + a
-        x = x + self._mlp(p, self._norm(x, p["ln2"]))
+        return x + self._mlp(p, self._norm(x, p["ln2"]))
+
+    def _block(self, p, x, cos, sin):
+        # Whole-region capture: the attention + gated-MLP block (norms,
+        # QKV/O projections, residual adds) traces into ONE TaskGraph, so
+        # the pass pipeline fuses across op-call boundaries — Q/K/V merge
+        # into one wide GEMM and each residual add becomes a GEMM epilogue
+        # — and the block executes as a single cached jax.jit call.  With
+        # TapirConfig.regions=False this is byte-identical to the per-op
+        # path (the region_vs_per_op benchmark control).
+        blk = tapir.parallel_region(self._block_body, name="dense_block")
+        x = blk(p, x, cos, sin)
         return shard_act(x, "batch", "seq", None)
 
     # ------------------------------------------------------------------

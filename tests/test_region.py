@@ -1,0 +1,232 @@
+"""Region capture tests: a whole transformer block (attention + gated MLP +
+norms + residuals) traced into ONE TaskGraph must
+
+* reproduce the per-op path numerically (tapir AND opaque modes),
+* contain strictly fewer library ops than the sum of the per-op graphs
+  (cross-op-call fusion: Q/K/V projections merge into one wide GEMM),
+* hit the region cache on re-invocation,
+* and survive 64-layer-deep graphs (iterative topo order — the recursive
+  walk blew the Python stack at this depth).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tapir
+from repro.core.ir import LIBRARY_OPS, TaskGraph, TensorType
+from repro.core.tapir import TapirConfig, cache_stats, clear_cache, use
+from repro.models import layers as L
+
+B, S, D, H, HKV, HD, FF = 2, 16, 64, 4, 2, 16, 128
+
+
+def _params(key):
+    def init(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(shape[0])
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "wq": init(ks[0], (D, H * HD)),
+        "wk": init(ks[1], (D, HKV * HD)),
+        "wv": init(ks[2], (D, HKV * HD)),
+        "wo": init(ks[3], (H * HD, D)),
+        "wg": init(ks[4], (D, FF)),
+        "wu": init(ks[5], (D, FF)),
+        "wd": init(ks[6], (FF, D)),
+    }
+
+
+def _block(p, x, cos, sin):
+    """Transformer block written against the public tapir ops — Q/K/V as
+    *separate* linear calls, which only a region can fuse."""
+    xn = L.rmsnorm(x, p["ln1"])
+    q = tapir.linear(xn, p["wq"]).reshape(B, S, H, HD)
+    k = tapir.linear(xn, p["wk"]).reshape(B, S, HKV, HD)
+    v = tapir.linear(xn, p["wv"]).reshape(B, S, HKV, HD)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    a = tapir.attention(q, k, v, causal=True).reshape(B, S, H * HD)
+    x = x + tapir.linear(a, p["wo"])
+    return x + tapir.gated_mlp(x, p["wg"], p["wu"], p["wd"])
+
+
+def _data(seed=0):
+    key = jax.random.PRNGKey(seed)
+    p = _params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (B, S, D), jnp.float32)
+    cos, sin = L.rope_table(jnp.arange(S), HD)
+    return p, x, cos, sin
+
+
+def _lib_count(g: TaskGraph) -> int:
+    return sum(1 for n in g.nodes.values() if n.op in LIBRARY_OPS)
+
+
+# ---------------------------------------------------------------------------
+# numerics: region == per-op, both modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["tapir", "opaque"])
+def test_region_matches_per_op(mode):
+    p, x, cos, sin = _data()
+    clear_cache()
+    with use(TapirConfig(mode=mode, regions=False)):
+        ref = _block(p, x, cos, sin)
+    clear_cache()
+    with use(TapirConfig(mode=mode, regions=True)):
+        got = tapir.parallel_region(_block)(p, x, cos, sin)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_region_matches_per_op_under_jit_and_grad():
+    p, x, cos, sin = _data()
+
+    def loss(p, x, on):
+        with use(TapirConfig(mode="tapir", regions=on)):
+            y = tapir.parallel_region(_block)(p, x, cos, sin)
+            return jnp.sum(jnp.square(y))
+
+    clear_cache()
+    l_ref, g_ref = jax.jit(jax.value_and_grad(loss), static_argnums=2)(
+        p, x, False)
+    clear_cache()
+    l_reg, g_reg = jax.jit(jax.value_and_grad(loss), static_argnums=2)(
+        p, x, True)
+    np.testing.assert_allclose(float(l_reg), float(l_ref), rtol=1e-5)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(g_reg[k]), np.asarray(g_ref[k]),
+                                   rtol=5e-4, atol=5e-4, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# structure: strictly fewer library ops than the per-op sum
+# ---------------------------------------------------------------------------
+
+
+def test_region_fuses_across_op_boundaries():
+    p, x, cos, sin = _data()
+    with use(TapirConfig(mode="tapir")):
+        region_g = tapir.trace_region(_block, p, x, cos, sin)
+
+        # the per-op decomposition of the same block: each public-op call
+        # optimized in its own graph (what the per-op path executes)
+        xn = L.rmsnorm(x, p["ln1"])
+        a_shape = jax.random.normal(jax.random.PRNGKey(1), (B, S, H * HD))
+        per_op_graphs = [
+            tapir.trace_region(lambda: tapir.linear(xn, p["wq"])),
+            tapir.trace_region(lambda: tapir.linear(xn, p["wk"])),
+            tapir.trace_region(lambda: tapir.linear(xn, p["wv"])),
+            tapir.trace_region(lambda: tapir.attention(
+                jax.random.normal(jax.random.PRNGKey(2), (B, S, H, HD)),
+                jax.random.normal(jax.random.PRNGKey(3), (B, S, HKV, HD)),
+                jax.random.normal(jax.random.PRNGKey(4), (B, S, HKV, HD)),
+                causal=True)),
+            tapir.trace_region(lambda: tapir.linear(a_shape, p["wo"])),
+            tapir.trace_region(lambda: tapir.gated_mlp(
+                x, p["wg"], p["wu"], p["wd"])),
+        ]
+    per_op_sum = sum(_lib_count(g) for g in per_op_graphs)
+    region_n = _lib_count(region_g)
+    assert region_n < per_op_sum, \
+        f"region {region_n} library ops vs per-op sum {per_op_sum}"
+    # the Q/K/V projections specifically must have merged into one GEMM
+    # feeding three slices
+    assert region_n == per_op_sum - 2
+
+
+def test_region_residual_becomes_epilogue():
+    p, x, cos, sin = _data()
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.trace_region(_block, p, x, cos, sin)
+    epis = [fn for n in g.nodes.values() for fn, _, _ in n.epilogue]
+    assert "add" in epis, f"residual adds should fold into epilogues:\n{g}"
+
+
+# ---------------------------------------------------------------------------
+# caching
+# ---------------------------------------------------------------------------
+
+
+def test_region_cache_hits_on_reinvocation():
+    clear_cache()
+    p, x, cos, sin = _data(0)
+    with use(TapirConfig(mode="tapir")):
+        y0 = tapir.parallel_region(_block)(p, x, cos, sin)
+        misses_after_first = cache_stats()["misses"]
+        _, x2, _, _ = _data(1)   # fresh values, same structure
+        y1 = tapir.parallel_region(_block)(p, x2, cos, sin)
+    st = cache_stats()
+    assert st["misses"] == misses_after_first, "second call must not compile"
+    assert st["hits"] >= 1
+    assert y0.shape == y1.shape
+
+
+# ---------------------------------------------------------------------------
+# deep graphs: iterative topo order
+# ---------------------------------------------------------------------------
+
+
+def test_topo_order_survives_3000_deep_chain():
+    g = TaskGraph("deep")
+    t = TensorType((4, 4), "float32")
+    nid = g.add_input("x", t)
+    for _ in range(3000):   # >> default python recursion limit
+        nid = g.add("ew", (nid,), t, pdims=(0, 1), fn="tanh")
+    g.set_outputs([nid])
+    order = g.topo_order()
+    assert len(order) == 3001
+    assert order[0] == g.inputs[0][1] and order[-1] == nid
+    assert g.prune() == 0
+
+
+def test_region_64_layer_stack():
+    """64 chained gated-MLP layers in ONE region: deep merged graph must
+    optimize, execute, and match the per-op path."""
+    key = jax.random.PRNGKey(42)
+    d, f = 16, 32
+    ws = [(jax.random.normal(jax.random.fold_in(key, 3 * i), (d, f)) / 4,
+           jax.random.normal(jax.random.fold_in(key, 3 * i + 1), (d, f)) / 4,
+           jax.random.normal(jax.random.fold_in(key, 3 * i + 2), (f, d)) / 4)
+          for i in range(64)]
+    x = jax.random.normal(jax.random.fold_in(key, 999), (2, d))
+
+    def stack(x, ws):
+        for wg, wu, wd in ws:
+            x = x + tapir.gated_mlp(x, wg, wu, wd)
+        return x
+
+    clear_cache()
+    with use(TapirConfig(mode="tapir", regions=False)):
+        ref = stack(x, ws)
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.trace_region(stack, x, ws)
+        got = tapir.parallel_region(stack)(x, ws)
+    assert len(g.nodes) > 200   # genuinely one deep merged graph
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# escape hatch: mid-region jnp coercion flushes, never breaks
+# ---------------------------------------------------------------------------
+
+
+def test_region_flush_on_foreign_op():
+    p, x, cos, sin = _data()
+    clear_cache()
+    with use(TapirConfig(mode="tapir", regions=False)):
+        ref = jnp.tanh(tapir.linear(x, p["wg"]))
+        ref = tapir.linear(ref, p["wd"])
+    with use(TapirConfig(mode="tapir")):
+        with tapir.region("seg") as r:
+            h = tapir.linear(x, p["wg"])
+            h = jnp.tanh(h)          # foreign op -> segment flush
+            out = tapir.linear(h, p["wd"])
+        assert r.segments >= 1
+        got = out.jax()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

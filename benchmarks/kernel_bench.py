@@ -178,10 +178,122 @@ def bench_region_vs_per_op(iters: int = 20, json_path="BENCH_region.json"):
     return out
 
 
+# ---------------------------------------------------------------------------
+# decode_region_vs_per_op: stateful decode regions (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+
+_DMAX = 128   # KV-cache capacity for the decode bench
+
+
+def _decode_block(p, x, ck, cv, pos, cos, sin):
+    """One transformer decode step against a KV cache slab, written with
+    the public stateful ops: under region capture the cache writes become
+    donated dynamic_update_slice nodes and the whole block is one jit."""
+    from repro.models.transformer import _decode_attention
+    B = x.shape[0]
+    xn = L.rmsnorm(x, p["ln1"])
+    q, k, v = tapir.multi_linear(xn, [p["wq"], p["wk"], p["wv"]])
+    q = q.reshape(B, 1, _RH, _RHD)
+    k = k.reshape(B, 1, _RHKV, _RHD)
+    v = v.reshape(B, 1, _RHKV, _RHD)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    ck = tapir.cache_write(ck, k, (0, pos, 0, 0))
+    cv = tapir.cache_write(cv, v, (0, pos, 0, 0))
+    o = _decode_attention(q, ck, cv, pos + 1)
+    x = x + tapir.linear(o.reshape(B, 1, _RH * _RHD), p["wo"])
+    xn2 = L.rmsnorm(x, p["ln2"])
+    return x + tapir.gated_mlp(xn2, p["wg"], p["wu"], p["wd"]), ck, cv
+
+
+def _decode_init(key, n_blocks):
+    params = _region_block_params(key, n_blocks)
+    x = jax.random.normal(jax.random.fold_in(key, 98), (_RB, 1, _RD))
+    caches = [(jnp.zeros((_RB, _DMAX, _RHKV, _RHD), jnp.float32),
+               jnp.zeros((_RB, _DMAX, _RHKV, _RHD), jnp.float32))
+              for _ in range(n_blocks)]
+    return params, x, caches
+
+
+def _decode_run(params, x, caches, steps, regions, blk):
+    outs = []
+    for t in range(steps):
+        pos = jnp.asarray(t, jnp.int32)
+        cos, sin = L.rope_table(jnp.arange(t, t + 1), _RHD)
+        h = x
+        for i, p in enumerate(params):
+            ck, cv = caches[i]
+            if regions:
+                h, ck, cv = blk(p, h, ck, cv, pos, cos, sin)
+            else:
+                h, ck, cv = _decode_block(p, h, ck, cv, pos, cos, sin)
+            caches[i] = (ck, cv)
+        outs.append(h)
+        x = jnp.tanh(h)   # feed back so steps depend on each other
+    return x, caches, outs
+
+
+def bench_decode_region_vs_per_op(iters: int = 3, steps: int = 16,
+                                  n_blocks: int = 2,
+                                  json_path="BENCH_decode.json"):
+    """Times ``steps`` decode steps on an ``n_blocks`` transformer, per-op
+    graphs vs one stateful region per block (library-call usage, no outer
+    jit) — the dispatch-dominated serving regime.  Checks that the region
+    path (a) bitwise-matches the per-op reference and (b) donates the
+    cache buffers (storage reuse across steps, no per-step copy)."""
+    key = jax.random.PRNGKey(3)
+    blk = tapir.parallel_region(_decode_block, name="bench_decode_block")
+
+    # correctness: bitwise match + donation, before timing
+    params, x0, caches = _decode_init(key, n_blocks)
+    with use(TapirConfig(mode="tapir", regions=False)):
+        ref_x, ref_caches, _ = _decode_run(params, x0, list(caches), 4,
+                                           False, blk)
+    params, x0, caches = _decode_init(key, n_blocks)
+    with use(TapirConfig(mode="tapir", regions=True)):
+        ptr0 = caches[0][0].unsafe_buffer_pointer()
+        got_x, got_caches, _ = _decode_run(params, x0, list(caches), 4,
+                                           True, blk)
+        donated = got_caches[0][0].unsafe_buffer_pointer() == ptr0
+    bitwise = bool(np.array_equal(np.asarray(ref_x), np.asarray(got_x))) \
+        and all(bool(np.array_equal(np.asarray(a), np.asarray(b)))
+                for (a, _), (b, _) in zip(ref_caches, got_caches))
+    print(f"decode_region_vs_per_op bitwise={bitwise} donated={donated}")
+
+    results = {}
+    for label, regions in (("per_op", False), ("region", True)):
+        clear_cache()
+        with use(TapirConfig(mode="tapir", regions=regions)):
+            params, x0, caches = _decode_init(key, n_blocks)
+            _decode_run(params, x0, list(caches), 2, regions, blk)  # warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                params, x0, caches = _decode_init(key, n_blocks)
+                out, _, _ = _decode_run(params, x0, list(caches), steps,
+                                        regions, blk)
+            jax.block_until_ready(out)
+            t = (time.perf_counter() - t0) / (iters * steps)
+            results[label] = {"ms_per_step": t * 1e3,
+                              "cache": cache_stats()}
+        print(f"decode_region_vs_per_op {label:8s} {t*1e3:9.3f} ms/step")
+    speedup = (results["per_op"]["ms_per_step"]
+               / results["region"]["ms_per_step"])
+    print(f"decode_region_vs_per_op speedup: {speedup:.2f}x")
+    out = {"per_op": results["per_op"], "region": results["region"],
+           "speedup": speedup, "bitwise_match": bitwise, "donated": donated,
+           "config": {"blocks": n_blocks, "B": _RB, "d": _RD,
+                      "max_len": _DMAX, "steps": steps}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
-                    choices=["all", "region_vs_per_op"])
+                    choices=["all", "region_vs_per_op",
+                             "decode_region_vs_per_op"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -189,6 +301,10 @@ def main():
     if args.case == "region_vs_per_op":
         bench_region_vs_per_op(iters=args.iters,
                                json_path=args.json or "BENCH_region.json")
+        return
+    if args.case == "decode_region_vs_per_op":
+        bench_decode_region_vs_per_op(
+            iters=args.iters, json_path=args.json or "BENCH_decode.json")
         return
 
     key = jax.random.PRNGKey(0)

@@ -20,11 +20,49 @@ import sys
 import numpy as np
 
 
+def check(out_dir: str, min_region_speedup: float = 1.5,
+          min_decode_speedup: float = 1.3) -> int:
+    """Perf regression gate: run the two region benchmarks and FAIL
+    (non-zero exit) if region_vs_per_op drops below ``min_region_speedup``
+    or decode_region_vs_per_op below ``min_decode_speedup`` / loses
+    bitwise-match / stops donating cache buffers."""
+    os.makedirs(out_dir, exist_ok=True)
+    from benchmarks import kernel_bench
+    rv = kernel_bench.bench_region_vs_per_op(
+        iters=10, json_path=os.path.join(out_dir, "BENCH_region.json"))
+    dv = kernel_bench.bench_decode_region_vs_per_op(
+        json_path=os.path.join(out_dir, "BENCH_decode.json"))
+    failures = []
+    if rv["speedup"] < min_region_speedup:
+        failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
+                        f"< {min_region_speedup}x")
+    if dv["speedup"] < min_decode_speedup:
+        failures.append(f"decode_region_vs_per_op speedup "
+                        f"{dv['speedup']:.2f}x < {min_decode_speedup}x")
+    if not dv["bitwise_match"]:
+        failures.append("decode region no longer bitwise-matches per-op")
+    if not dv["donated"]:
+        failures.append("decode cache buffers no longer donated")
+    if failures:
+        print("CHECK FAILED:")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print(f"CHECK OK: region {rv['speedup']:.2f}x, "
+          f"decode {dv['speedup']:.2f}x, bitwise, donated")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: fail if region speedups regress")
     ap.add_argument("--out", default="results")
     args = ap.parse_args()
+
+    if args.check:
+        sys.exit(check(args.out))
     os.makedirs(args.out, exist_ok=True)
     iters = 3 if args.quick else 5
     batch = 32 if args.quick else 64

@@ -10,51 +10,111 @@ Semantics: ``@given`` runs the test body ``max_examples`` times with
 pseudo-random draws from each strategy.  Draws are seeded from the test
 name, so runs are deterministic across invocations — weaker than real
 hypothesis (no shrinking, no example database) but sufficient for the
-randomized-equivalence tests here.  If the real package is ever installed
-ahead of ``src/`` on the path, it shadows this shim transparently.
+randomized-equivalence tests here.
+
+If a REAL hypothesis distribution is importable from anywhere else on
+``sys.path`` (the image ships it some day), this module detects it at
+import time and defers: the real package is loaded and installed in
+``sys.modules`` under this name, so ``import hypothesis`` resolves to the
+genuine article and the shim definitions below never take effect.
 """
 from __future__ import annotations
 
+import os
 import random
+import sys
 import zlib
 
-from . import strategies  # noqa: F401
 
-__version__ = "0.0-repro-shim"
+def _find_real_hypothesis():
+    """ModuleSpec of a hypothesis package that is NOT this shim, if any."""
+    import importlib.machinery
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for entry in sys.path:
+        try:
+            entry_abs = os.path.abspath(entry or ".")
+            if entry_abs == here:
+                continue
+            spec = importlib.machinery.PathFinder.find_spec(
+                "hypothesis", [entry_abs])
+        except Exception:
+            continue
+        if spec is not None and spec.origin and \
+                not os.path.abspath(spec.origin).startswith(here + os.sep):
+            return spec
+    return None
 
-_DEFAULT_MAX_EXAMPLES = 20
+
+def _defer_to_real(spec) -> bool:
+    """Load the real package over this module's identity; True on success.
+    Swapping ``sys.modules`` mid-exec is the supported mechanism: the
+    import system returns whatever ``sys.modules["hypothesis"]`` holds
+    once this module body finishes."""
+    shim = sys.modules.get(__name__)
+    saved = {k: m for k, m in sys.modules.items()
+             if k == "hypothesis" or k.startswith("hypothesis.")}
+    try:
+        import importlib.util
+        real = importlib.util.module_from_spec(spec)
+        for k in saved:
+            del sys.modules[k]
+        sys.modules["hypothesis"] = real
+        spec.loader.exec_module(real)
+        globals().update({k: v for k, v in real.__dict__.items()
+                          if not k.startswith("__")})
+        return True
+    except Exception:
+        # drop anything the real package managed to import (its submodules
+        # are incompatible with the shim), then restore the shim entries
+        for k in [k for k in sys.modules
+                  if k == "hypothesis" or k.startswith("hypothesis.")]:
+            del sys.modules[k]
+        sys.modules.update(saved)
+        if shim is not None:
+            sys.modules["hypothesis"] = shim
+        return False
 
 
-def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
-             **_ignored):
-    """Decorator recording run settings (applied above or below @given)."""
-    def deco(fn):
-        fn._hyp_max_examples = max_examples
-        return fn
-    return deco
+_real = _find_real_hypothesis()
+_DEFERRED = _real is not None and _defer_to_real(_real)
 
+if not _DEFERRED:
+    from . import strategies  # noqa: F401
 
-def given(**strategy_kwargs):
-    def deco(fn):
-        # NOTE: no functools.wraps — pytest would introspect the wrapped
-        # signature and demand fixtures for the strategy parameters.
-        def wrapper(*args, **kwargs):
-            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
-            seed = zlib.crc32(fn.__qualname__.encode())
-            rng = random.Random(seed)
-            for i in range(n):
-                draws = {k: s.example(rng)
-                         for k, s in strategy_kwargs.items()}
-                try:
-                    fn(*args, **draws, **kwargs)
-                except Exception as e:
-                    raise AssertionError(
-                        f"{fn.__name__} failed on example {i}: "
-                        f"{draws!r}") from e
-        wrapper.__name__ = fn.__name__
-        wrapper.__qualname__ = fn.__qualname__
-        wrapper.__module__ = fn.__module__
-        wrapper.__doc__ = fn.__doc__
-        wrapper.__dict__.update(fn.__dict__)
-        return wrapper
-    return deco
+    __version__ = "0.0-repro-shim"
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Decorator recording run settings (applied above or below @given)."""
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would introspect the wrapped
+            # signature and demand fixtures for the strategy parameters.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    draws = {k: s.example(rng)
+                             for k, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **draws, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__name__} failed on example {i}: "
+                            f"{draws!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return deco

@@ -62,6 +62,12 @@ PRIMITIVE_OPS = frozenset({
     # ``attrs["fn"]`` on its lowered inputs.  Keeps norms/RoPE/etc. inside a
     # single region graph without reimplementing their numerics in the IR.
     "pyfunc",
+    # stateful-buffer ops (KV cache / SSM state).  ``dynamic_slice`` reads a
+    # window at a (possibly data-dependent) offset; ``dynamic_update_slice``
+    # writes one and may *donate* its buffer input (``Node.donates``) so the
+    # lowered jit updates the cache in place; ``index`` is static basic
+    # indexing (integers + slices) on a traced tensor.
+    "dynamic_slice", "dynamic_update_slice", "index",
 })
 LIBRARY_OPS = frozenset({"matmul", "attention", "linear_scan", "conv2d"})
 
@@ -92,6 +98,14 @@ class Node:
     # Epilogue: fused elementwise tail (filled by the fusion pass on library
     # ops).  Each entry: (fn_name, extra_input_nids, attrs).
     epilogue: list[tuple[str, tuple[int, ...], dict]] = field(default_factory=list)
+    # Aliasing: nid of the input buffer this node's output aliases (in-place
+    # update intent).  When the aliased buffer is a graph input, the emitted
+    # jit donates it (``donate_argnums``) so the update happens without a
+    # copy.  Alias-carrying nodes are never CSE'd, and ``anti`` records
+    # write-after-read edges: nodes that must execute BEFORE this write
+    # because they read the pre-write buffer (enforced by topo_order).
+    donates: Optional[int] = None
+    anti: tuple[int, ...] = ()
     schedule: Schedule = field(default_factory=Schedule)
 
     def flops(self) -> float:
@@ -115,10 +129,27 @@ class Node:
             return float(np.prod([e for _, e in self.rdims]) * self.ttype.size)
         return 0.0
 
+    def bytes_moved(self, update_ttype: Optional[TensorType] = None) -> float:
+        """HBM traffic of a cache op (the cost model's bandwidth term).
+
+        ``dynamic_update_slice``: the update's bytes when the buffer is
+        donated (in-place write), else update + a full copy of the buffer
+        (XLA materializes the new value).  ``dynamic_slice``/``slice``/
+        ``index``: the bytes of the window read."""
+        if self.op == "dynamic_update_slice":
+            upd = update_ttype.bytesize if update_ttype is not None else 0
+            if self.donates is not None:
+                return float(upd)
+            return float(upd + self.ttype.bytesize)
+        return float(self.ttype.bytesize)   # reads: the window's bytes
+
     def key(self) -> tuple:
-        """Structural hash key for CSE."""
+        """Structural hash key for CSE.  ``donates`` is part of the key (two
+        writes with different aliasing intent are never the same value for
+        buffer-reuse purposes); ``anti`` is ordering-only and excluded."""
         frozen_attrs = tuple(sorted((k, _freeze(v)) for k, v in self.attrs.items()))
-        return (self.op, self.inputs, self.ttype, frozen_attrs, self.pdims, self.rdims)
+        return (self.op, self.inputs, self.ttype, frozen_attrs, self.pdims,
+                self.rdims, self.donates)
 
 
 def _freeze(v):
@@ -156,15 +187,25 @@ class TaskGraph:
     # -- construction -------------------------------------------------------
     def add(self, op: str, inputs: Iterable[int], ttype: TensorType,
             pdims: tuple[int, ...] = (), rdims: tuple[tuple[str, int], ...] = (),
-            **attrs) -> int:
+            donates: Optional[int] = None, **attrs) -> int:
         assert op in PRIMITIVE_OPS or op in LIBRARY_OPS, f"unknown op {op}"
         nid = next(self._counter)
         inputs = tuple(inputs)
+        anti: tuple[int, ...] = ()
+        if donates is not None:
+            # write-after-read: every existing reader of the aliased buffer
+            # must execute before this in-place write.  Captured here (the
+            # tracer appends nodes in program order, so "existing readers"
+            # is exactly the reads that precede the write).
+            anti = tuple(c for c in self._ensure_cons().get(donates, ()))
         self.nodes[nid] = Node(nid, op, inputs, ttype, attrs,
-                               tuple(pdims), tuple(rdims))
+                               tuple(pdims), tuple(rdims),
+                               donates=donates, anti=anti)
         if self._cons is not None:
             self._cons[nid] = set()
             for i in inputs:
+                self._cons.setdefault(i, set()).add(nid)
+            for i in anti:
                 self._cons.setdefault(i, set()).add(nid)
         return nid
 
@@ -182,6 +223,8 @@ class TaskGraph:
         deps = list(node.inputs)
         for _, extra, _ in node.epilogue:
             deps.extend(extra)
+        # anti-deps: an in-place write orders after every read of its buffer
+        deps.extend(node.anti)
         return deps
 
     def topo_order(self) -> list[int]:
@@ -238,6 +281,10 @@ class TaskGraph:
                     (fn, tuple(new if i == old else i for i in extra), a)
                     for fn, extra, a in node.epilogue
                 ]
+            if old in node.anti:
+                node.anti = tuple(new if i == old else i for i in node.anti)
+            if node.donates == old:
+                node.donates = new
             cons.setdefault(new, set()).add(cid)
         cons[old] = set()
         self.outputs = [new if o == old else o for o in self.outputs]
@@ -271,6 +318,22 @@ class TaskGraph:
             self._cons = None   # rebuild lazily
         return len(dead)
 
+    # -- aliasing -----------------------------------------------------------
+    def donated_inputs(self) -> list[int]:
+        """Graph-input nids whose buffers some live node donates (writes in
+        place).  These become ``donate_argnums`` of the emitted jit: the
+        caller's cache buffer is consumed and its storage reused for the
+        updated output (XLA inserts copies itself if a donated input is
+        still read after the aliased write, so donation is always safe)."""
+        live = set(self.topo_order())
+        out = []
+        inp_nids = {nid for _, nid in self.inputs}
+        for nid in live:
+            d = self.nodes[nid].donates
+            if d is not None and d in inp_nids and d not in out:
+                out.append(d)
+        return out
+
     # -- accounting ---------------------------------------------------------
     def total_flops(self) -> float:
         return sum(n.flops() for n in self.nodes.values())
@@ -280,7 +343,7 @@ class TaskGraph:
         parts = []
         for nid in self.topo_order():
             n = self.nodes[nid]
-            parts.append((n.key(),
+            parts.append((n.key(), n.anti,
                           tuple((fn, extra, _freeze(a)) for fn, extra, a in n.epilogue)))
         return (self.name, tuple(parts), tuple(self.outputs),
                 tuple(n for n, _ in self.inputs))
@@ -291,8 +354,10 @@ class TaskGraph:
             n = self.nodes[nid]
             epi = f" +epi[{','.join(fn for fn, _, _ in n.epilogue)}]" if n.epilogue else ""
             sch = f" sched={n.schedule.dim_binding}" if n.schedule.dim_binding else ""
+            ali = f" donates=%{n.donates}" if n.donates is not None else ""
+            ali += f" anti={list(n.anti)}" if n.anti else ""
             lines.append(
                 f"  %{nid} = {n.op}{list(n.inputs)} :: {n.ttype.dtype}{list(n.ttype.shape)}"
-                f" pdims={list(n.pdims)} rdims={list(n.rdims)}{epi}{sch}")
+                f" pdims={list(n.pdims)} rdims={list(n.rdims)}{epi}{sch}{ali}")
         lines.append(f"  outputs: {self.outputs}")
         return "\n".join(lines)

@@ -120,11 +120,13 @@ def _lower_attention(node: Node, env: dict, backend: str) -> Any:
                     q, k, v, causal=causal,
                     block_kv=node.schedule.tile.get("bkv", 1024))
         elif backend == "cpu":
-            # late scheduling, CPU target: materialized scores, but with the
-            # K/V head group folded into the einsum — the GQA expansion is
-            # an index remap inside the contraction, never a materialized
-            # jnp.repeat of K/V (only the opaque control pays that copy).
-            y = _materialized_attention(q, k, v, causal, bias, grouped=True)
+            # late scheduling, CPU target: materialized scores.  Whether the
+            # K/V head group folds into the einsum (no copy) or K/V repeat
+            # to full head count (BLAS-shaped batched GEMM) is the cost
+            # model's call (schedule.pick_gqa_impl): repeat when the copy
+            # amortizes against compute, grouped when KV bytes dominate.
+            grouped = node.attrs.get("gqa_impl", "grouped") != "repeat"
+            y = _materialized_attention(q, k, v, causal, bias, grouped=grouped)
         else:
             # fused composite: one expression, fp32 accum, grouped KV heads
             y = fa.ref.attention_ref(q, k, v, causal=causal, bias=bias)
@@ -208,6 +210,14 @@ def _lower_conv2d(node: Node, env: dict, backend: str) -> Any:
 # -- primitive lowerings -------------------------------------------------------
 
 
+def _resolve_starts(node: Node, env: dict, dyn_inputs: tuple) -> tuple:
+    """Interleave static int starts with dynamic scalar operands (the None
+    holes of ``static_starts`` consume ``dyn_inputs`` in order)."""
+    it = iter(dyn_inputs)
+    return tuple(s if s is not None else env[next(it)]
+                 for s in node.attrs["static_starts"])
+
+
 def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
                 bf16_partials: bool = False) -> Any:
     op = node.op
@@ -248,7 +258,21 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
         return jax.lax.iota(node.ttype.dtype, node.ttype.shape[0])
     if op == "pyfunc":
         vals = [env[i] for i in node.inputs]
-        return node.attrs["fn"](*vals, **dict(node.attrs.get("static", ())))
+        res = node.attrs["fn"](*vals, **dict(node.attrs.get("static", ())))
+        out_i = node.attrs.get("out")
+        return res if out_i is None else res[out_i]
+    if op == "index":
+        from .tapir import decode_index
+        return env[node.inputs[0]][decode_index(node.attrs["idx"])]
+    if op == "dynamic_slice":
+        buf = env[node.inputs[0]]
+        starts = _resolve_starts(node, env, node.inputs[1:])
+        return jax.lax.dynamic_slice(buf, starts, node.attrs["sizes"])
+    if op == "dynamic_update_slice":
+        buf, upd = env[node.inputs[0]], env[node.inputs[1]]
+        starts = _resolve_starts(node, env, node.inputs[2:])
+        upd = jnp.asarray(upd).astype(buf.dtype).reshape(node.attrs["window"])
+        return jax.lax.dynamic_update_slice(buf, upd, starts)
     if op == "matmul":
         return _lower_matmul(node, env, backend, bf16_partials)
     if op == "attention":

@@ -17,6 +17,29 @@ from .fusion import fuse_added_gemms, fuse_epilogues, fuse_shared_input
 from .inline import expose_libraries, seal_libraries
 
 
+_current_mesh = None
+
+
+def mesh_has_model_axis() -> bool:
+    """True when an ambient mesh with a "model" axis is active — sharded
+    execution, where fusion shape must keep TP shards slice-aligned.
+    Runs on the op-dispatch hot path (part of every cache key), so the
+    sharding import is resolved once and the probe itself is two attribute
+    lookups."""
+    global _current_mesh
+    if _current_mesh is None:
+        try:
+            from repro.dist.sharding import current_mesh as _cm
+        except Exception:
+            return False
+        _current_mesh = _cm
+    try:
+        m = _current_mesh()
+        return m is not None and "model" in m.axis_names
+    except Exception:
+        return False
+
+
 def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
                  ablate_serialization: bool = False) -> TaskGraph:
     if mode == "opaque":
@@ -30,8 +53,13 @@ def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
     fuse_added_gemms(g)
     cse(g)
     # fusion SHAPE is a late-scheduling decision: one wide GEMM for BLAS
-    # targets, stacked batched GEMM on the TPU mesh (shard alignment)
-    fuse_shared_input(g, stacked=cm.name.startswith("tpu"))
+    # targets, stacked batched GEMM on the TPU target AND whenever a model
+    # axis is active — the concat form puts segment boundaries inside TP
+    # shards, which GSPMD lowers to halo permutes and (on this jaxlib's CPU
+    # SPMD partitioner) miscompiles outright when one misaligned slice
+    # carries a model-axis constraint while its siblings don't
+    fuse_shared_input(g, stacked=cm.name.startswith("tpu")
+                      or mesh_has_model_axis())
     fuse_epilogues(g)
     g.prune()
     cm_eff = cm if not ablate_serialization else CostModel(

@@ -16,6 +16,11 @@ def cse(g: TaskGraph) -> int:
         node = g.nodes[nid]
         if node.op == "input" or node.epilogue:
             continue
+        if node.donates is not None:
+            # in-place buffer write: hash-consing two writes would collapse
+            # distinct buffer states (and double-donate one input) — each
+            # write is its own event, never CSE'd.
+            continue
         key = node.key()
         if key in seen and seen[key] != nid:
             g.replace_uses(nid, seen[key])

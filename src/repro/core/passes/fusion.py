@@ -36,6 +36,7 @@ def _depends_on(g: TaskGraph, src: int, target: int) -> bool:
         seen.add(nid)
         n = g.nodes[nid]
         stack.extend(n.inputs)
+        stack.extend(n.anti)
         for _, extra, _ in n.epilogue:
             stack.extend(extra)
     return False

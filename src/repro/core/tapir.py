@@ -23,6 +23,28 @@ Two execution regimes:
   adds, norms and sibling projections that live in *different* graphs in
   the per-op regime become one fused library op with an epilogue — the
   paper's cross-library-call claim at block scale.
+
+Regions are also **stateful**: in-place buffer updates (KV caches, SSM
+state) are first-class.  ``tapir.cache_write(buf, upd, starts)`` /
+``tapir.cache_read(buf, starts, sizes)`` (and the jnp-style
+``t.at[...].set(...)`` / basic ``t[...]`` indexing on traced tensors)
+record ``dynamic_update_slice`` / ``dynamic_slice`` / ``index`` nodes.  A
+write carries aliasing metadata (``Node.donates``): it is never CSE'd,
+orders after every read of the pre-write buffer (anti-deps), and when the
+aliased buffer is a region *input* the emitted jit donates it
+(``donate_argnums``) so the cache updates in place — one decode step
+becomes ONE region with zero per-step cache copies::
+
+    @tapir.parallel_region
+    def decode_block(p, x, ck, cv, pos, cos, sin):
+        xn = rmsnorm(x, p["ln1"])                 # lifts as one node
+        q, k, v = tapir.multi_linear(xn, [p["wq"], p["wk"], p["wv"]])
+        ...
+        ck = tapir.cache_write(ck, k, (0, pos, 0, 0))   # donates ck
+        cv = tapir.cache_write(cv, v, (0, pos, 0, 0))   # donates cv
+        o = _decode_attention(q, ck, cv, pos + 1)       # ordered after
+        ...
+        return x, ck, cv        # updated cache threads back to the caller
 """
 from __future__ import annotations
 
@@ -40,7 +62,7 @@ import numpy as np
 
 from .ir import TaskGraph, TensorType
 from .lowering import emit
-from .passes import run_pipeline
+from .passes import mesh_has_model_axis, run_pipeline
 from .schedule import CPU_COST_MODEL, CostModel
 
 # ---------------------------------------------------------------------------
@@ -110,8 +132,11 @@ def _tt(x) -> TensorType:
 
 
 def _cfg_key(cfg: TapirConfig, backend: str) -> tuple:
+    # the ambient mesh changes the fusion SHAPE (stacked vs concat QKV), so
+    # compiled artifacts must not leak between sharded and unsharded contexts
     return (cfg.mode, backend, cfg.ablate_serialization,
-            cfg.resolved_cost_model().name, cfg.bf16_partials)
+            cfg.resolved_cost_model().name, cfg.bf16_partials,
+            mesh_has_model_axis())
 
 
 def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
@@ -122,7 +147,25 @@ def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
                      ablate_serialization=cfg.ablate_serialization)
     fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
     if jit:
-        fn = jax.jit(fn)
+        donated = g.donated_inputs()
+        if donated:
+            # in-place buffer writes: jit positionally so donate_argnums can
+            # name exactly the cache inputs the graph's update-slice nodes
+            # donate — XLA then aliases input and output storage (no
+            # per-step cache copy).  The dict calling convention is kept by
+            # the thin rebind wrapper.
+            names = [n for n, _ in g.inputs]
+            don_names = {n for n, nid in g.inputs if nid in donated}
+            pos = tuple(i for i, n in enumerate(names) if n in don_names)
+            raw = fn
+
+            def _positional(*argv):
+                return raw(dict(zip(names, argv)))
+
+            jitted = jax.jit(_positional, donate_argnums=pos)
+            fn = lambda inputs: jitted(*[inputs[n] for n in names])  # noqa: E731
+        else:
+            fn = jax.jit(fn)
     _CACHE_STATS["pipeline_s"] += time.perf_counter() - t0
     _GRAPHS[key] = g
     _CACHE[key] = fn
@@ -280,6 +323,125 @@ class TracedTensor:
         nid = reg.g.add("convert", (reg.nid_of(self),), out_t,
                         pdims=tuple(range(self.ndim)))
         return reg.handle(nid)
+
+    # -- indexing --------------------------------------------------------
+    def __getitem__(self, item):
+        """Basic static indexing (ints/slices/Ellipsis) stays lazy as an
+        ``index`` node; anything fancier (array indices, booleans) falls
+        back through the flush escape hatch."""
+        reg = self._region
+        enc = _encode_index(item)
+        if reg.closed or enc is None:
+            return self.jax()[item]
+        out = jax.eval_shape(lambda a: a[item],
+                             jax.ShapeDtypeStruct(self.shape, self.dtype))
+        out_t = TensorType(tuple(out.shape), str(out.dtype))
+        nid = reg.g.add("index", (reg.nid_of(self),), out_t,
+                        pdims=tuple(range(len(out_t.shape))), idx=enc)
+        return reg.handle(nid)
+
+    @property
+    def at(self):
+        """``x.at[idx].set(v)`` — the dynamic-update-slice subset of jnp's
+        index-update protocol (int / scalar-array / full-slice indices)."""
+        return _TracedAt(self)
+
+
+class _TracedAt:
+    __slots__ = ("_t",)
+
+    def __init__(self, t: TracedTensor):
+        self._t = t
+
+    def __getitem__(self, idx):
+        return _TracedAtIdx(self._t, idx if isinstance(idx, tuple) else (idx,))
+
+
+class _TracedAtIdx:
+    __slots__ = ("_t", "_idx")
+
+    def __init__(self, t: TracedTensor, idx: tuple):
+        self._t = t
+        self._idx = idx
+
+    def set(self, value, donate: bool = False):
+        """In-bounds window set.  Out-of-bounds *dynamic* (scalar-array)
+        starts follow ``lax.dynamic_update_slice`` clamp semantics, not
+        jnp's drop — cache positions must stay within capacity."""
+        t = self._t
+        idx = self._idx + (slice(None),) * (t.ndim - len(self._idx))
+        starts, window = [], []
+        for d, (s, extent) in enumerate(zip(idx, t.shape)):
+            if isinstance(s, (bool, np.bool_)):
+                return _at_set_fallback(t, self._idx, value)
+            if isinstance(s, slice):
+                if s != slice(None):
+                    if not (s.step in (None, 1)):
+                        return _at_set_fallback(t, self._idx, value)
+                    lo, hi, _ = s.indices(extent)
+                    if hi <= lo:
+                        return _at_set_fallback(t, self._idx, value)
+                    starts.append(lo)
+                    window.append(hi - lo)
+                else:
+                    starts.append(0)
+                    window.append(extent)
+            elif isinstance(s, (int, np.integer)):
+                # jnp index-update wraps negative indices; lax.dus clamps,
+                # so normalize here
+                starts.append(int(s) + extent if int(s) < 0 else int(s))
+                window.append(1)
+            elif _is_arraylike(s) and getattr(s, "ndim", None) == 0 \
+                    and jnp.issubdtype(jnp.dtype(s.dtype), jnp.integer):
+                starts.append(s)
+                window.append(1)
+            else:
+                return _at_set_fallback(t, self._idx, value)
+        return cache_write(t, value, tuple(starts), window=tuple(window),
+                           donate=donate)
+
+
+def _at_set_fallback(t: TracedTensor, idx, value):
+    v = value.jax() if isinstance(value, TracedTensor) else value
+    arr = jnp.asarray(t.jax())
+    return arr.at[idx].set(v)
+
+
+def _encode_index(item) -> Optional[tuple]:
+    """Hashable encoding of a basic index expression (None if unsupported)."""
+    items = item if isinstance(item, tuple) else (item,)
+    enc = []
+    for s in items:
+        if isinstance(s, (bool, np.bool_)):
+            return None       # boolean index: mask semantics, fall back
+        if isinstance(s, (int, np.integer)):
+            enc.append(("i", int(s)))
+        elif isinstance(s, slice):
+            if not all(x is None or isinstance(x, (int, np.integer))
+                       for x in (s.start, s.stop, s.step)):
+                return None
+            enc.append(("s", s.start, s.stop, s.step))
+        elif s is Ellipsis:
+            enc.append(("e",))
+        elif s is None:
+            enc.append(("n",))
+        else:
+            return None
+    return tuple(enc)
+
+
+def decode_index(enc: tuple) -> tuple:
+    out = []
+    for e in enc:
+        if e[0] == "i":
+            out.append(e[1])
+        elif e[0] == "s":
+            out.append(slice(e[1], e[2], e[3]))
+        elif e[0] == "e":
+            out.append(Ellipsis)
+        else:
+            out.append(None)
+    return tuple(out)
 
 
 _EAGER_BIN = {"add": lambda a, b: a + b, "sub": lambda a, b: a - b,
@@ -572,15 +734,101 @@ def _is_arraylike(v) -> bool:
             and hasattr(v, "shape") and hasattr(v, "dtype"))
 
 
+# ---------------------------------------------------------------------------
+# Stateful buffer ops (KV cache / SSM state)
+# ---------------------------------------------------------------------------
+
+
+def _start_operands(reg: "_Region", starts) -> tuple[tuple, tuple]:
+    """Split window starts into static ints and dynamic scalar operands.
+    Returns (static_starts with None holes, nids of the dynamic holes)."""
+    static, nids = [], []
+    for s in starts:
+        if isinstance(s, (int, np.integer)):
+            static.append(int(s))
+        else:
+            static.append(None)
+            nids.append(reg.nid_of(s))
+    return tuple(static), tuple(nids)
+
+
+def cache_write(buf, update, starts, window=None, donate: bool = True):
+    """Window write with in-place intent: ``buf[starts:starts+window] = update``.
+
+    Outside a region this is ``lax.dynamic_update_slice`` (the compiler
+    handles aliasing under the caller's jit).  Inside a region it records a
+    ``dynamic_update_slice`` node whose buffer input is *donated* (when
+    ``donate=True``), so the region's own jit updates the cache storage in
+    place — the caller must treat ``buf`` as consumed and use the returned
+    tensor.  ``starts`` entries may be python ints or integer scalars
+    (traced or concrete); ``window`` defaults to ``update.shape`` and must
+    have ``buf.ndim`` entries."""
+    reg = _active_region()
+    if window is None:
+        window = tuple(update.shape)
+    if reg is None:
+        u = jnp.asarray(update).astype(buf.dtype).reshape(window)
+        return jax.lax.dynamic_update_slice(buf, u, tuple(starts))
+    bi = reg.nid_of(buf)
+    ui = reg.nid_of(update)
+    b_t = reg.g.nodes[bi].ttype
+    if len(window) != len(b_t.shape):
+        raise ValueError(f"cache_write window rank {len(window)} != "
+                         f"buffer rank {len(b_t.shape)}")
+    static, dyn = _start_operands(reg, starts)
+    nid = reg.g.add("dynamic_update_slice", (bi, ui) + dyn, b_t,
+                    pdims=tuple(range(len(b_t.shape))),
+                    donates=bi if donate else None,
+                    static_starts=static, window=tuple(window))
+    return reg.handle(nid)
+
+
+def elemwise(x, fn: str):
+    """Unary elementwise op by registry name ("silu", "tanh", ...).  Stays
+    lazy on a traced tensor (one ``ew`` node — fusable into epilogues);
+    eager otherwise."""
+    if not isinstance(x, TracedTensor):
+        from .lowering import _EW
+        return _EW[fn](x)
+    reg = x._region
+    if reg.closed:
+        from .lowering import _EW
+        return _EW[fn](x.jax())
+    nid = reg.g.add("ew", (reg.nid_of(x),), x.ttype,
+                    pdims=tuple(range(x.ndim)), fn=fn)
+    return reg.handle(nid)
+
+
+def cache_read(buf, starts, sizes):
+    """Window read: ``buf[starts : starts+sizes]`` (``lax.dynamic_slice``).
+    Inside a region it stays lazy as a ``dynamic_slice`` node, ordered
+    before any subsequent in-place write of the same buffer."""
+    reg = _active_region()
+    if reg is None:
+        return jax.lax.dynamic_slice(buf, tuple(starts), tuple(sizes))
+    bi = reg.nid_of(buf)
+    b_t = reg.g.nodes[bi].ttype
+    static, dyn = _start_operands(reg, starts)
+    out_t = TensorType(tuple(int(s) for s in sizes), b_t.dtype)
+    nid = reg.g.add("dynamic_slice", (bi,) + dyn, out_t,
+                    pdims=tuple(range(len(out_t.shape))),
+                    static_starts=static, sizes=tuple(int(s) for s in sizes))
+    return reg.handle(nid)
+
+
 def lift(fn: Callable, *args, **static):
-    """Record an opaque python composite as ONE region node.
+    """Record an opaque python composite as ONE region node (or one node
+    per output for tuple-returning fns).
 
     ``fn(*arrays, **static)`` must be a pure jnp function of its array
     arguments (norms, RoPE, ...).  Outside a region this just calls ``fn``.
     Inside, the call becomes a ``pyfunc`` node: the region stays a single
     graph (single jit, CSE-able) without reimplementing fn's numerics in
-    the IR.  ``fn`` must be a module-level function (its identity is part
-    of the graph signature / cache key)."""
+    the IR.  A fn returning a flat tuple of arrays yields one ``pyfunc``
+    node per element (each re-invokes fn and projects; XLA dedups the
+    identical pure subcomputations under the region jit).  ``fn`` must be
+    a module-level function (its identity is part of the graph signature /
+    cache key)."""
     reg = _active_region()
     if reg is None:
         return fn(*args, **static)
@@ -589,12 +837,23 @@ def lift(fn: Callable, *args, **static):
                                 jnp.dtype(reg.g.nodes[n].ttype.dtype))
            for n in nids]
     out = jax.eval_shape(functools.partial(fn, **static), *sds)
-    if not isinstance(out, jax.ShapeDtypeStruct):
-        raise TypeError(f"lift({fn.__name__}) must return a single array")
-    out_t = TensorType(tuple(out.shape), str(out.dtype))
-    nid = reg.g.add("pyfunc", tuple(nids), out_t,
-                    fn=fn, static=tuple(sorted(static.items())))
-    return reg.handle(nid)
+    if isinstance(out, jax.ShapeDtypeStruct):
+        out_t = TensorType(tuple(out.shape), str(out.dtype))
+        nid = reg.g.add("pyfunc", tuple(nids), out_t,
+                        fn=fn, static=tuple(sorted(static.items())))
+        return reg.handle(nid)
+    if isinstance(out, (tuple, list)) and all(
+            isinstance(o, jax.ShapeDtypeStruct) for o in out):
+        handles = []
+        for i, o in enumerate(out):
+            out_t = TensorType(tuple(o.shape), str(o.dtype))
+            nid = reg.g.add("pyfunc", tuple(nids), out_t,
+                            fn=fn, static=tuple(sorted(static.items())),
+                            out=i)
+            handles.append(reg.handle(nid))
+        return tuple(handles)
+    raise TypeError(f"lift({fn.__name__}) must return an array or a flat "
+                    f"tuple of arrays, got {type(out)}")
 
 
 def capture_region(fn: Callable, *args, **kwargs) -> TaskGraph:

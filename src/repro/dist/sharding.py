@@ -43,19 +43,26 @@ def configure_rules(**kwargs) -> dict:
     return prev
 
 
+try:  # legacy ``with mesh:`` context lookup — imported once, not per call
+    from jax._src import mesh as _mesh_lib
+except Exception:  # pragma: no cover - jax internals moved
+    _mesh_lib = None
+
+
 def current_mesh():
     """The ambient mesh: the ``jax.set_mesh`` shim's mesh, else the legacy
-    ``with mesh:`` context's physical mesh, else None."""
+    ``with mesh:`` context's physical mesh, else None.  Called on the op
+    dispatch hot path (cache keys), so it must stay allocation-free."""
     m = compat.ambient_mesh()
     if m is not None and not getattr(m, "empty", False):
         return m
-    try:
-        from jax._src import mesh as mesh_lib
-        m = mesh_lib.thread_resources.env.physical_mesh
-        if m is not None and not m.empty:
-            return m
-    except Exception:
-        pass
+    if _mesh_lib is not None:
+        try:
+            m = _mesh_lib.thread_resources.env.physical_mesh
+            if m is not None and not m.empty:
+                return m
+        except Exception:
+            pass
     return None
 
 

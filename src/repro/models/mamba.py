@@ -26,6 +26,30 @@ from .transformer import DenseLM, _block_specs, _masked_decode_attention
 CONV_K = 4
 
 
+def _ssd_gates(xBC, dt, dt_bias, A_log, din, N, H, dtype):
+    """SSD gate prep (dt softplus, decay, B/C broadcast to heads) — one
+    liftable composite so the whole Mamba block stays a single region."""
+    B_, S = dt.shape[0], dt.shape[1]
+    Bm = xBC[..., din:din + N]
+    Cm = xBC[..., din + N:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          dt_bias.astype(jnp.float32))          # [B,S,H]
+    a = jnp.exp(-jnp.exp(jnp.clip(A_log.astype(jnp.float32),
+                                  -6.0, 4.0)) * dtv)            # [B,S,H]
+    w = jnp.broadcast_to(a[..., None], (B_, S, H, N))
+    q = jnp.broadcast_to(Cm[:, :, None], (B_, S, H, N)).astype(dtype)
+    k = (jnp.broadcast_to(Bm[:, :, None], (B_, S, H, N))
+         * dtv[..., None]).astype(dtype)
+    return q, k, w
+
+
+def _ssm_step(q, k, xc, w, state):
+    """Stateful SSD step (decode): chunked scan carrying the [B,H,N,hd]
+    SSM state — the same stateful-capture problem as a KV-cache write."""
+    return ls_ops.linear_scan_chunked(q, k, xc, w, chunk=64,
+                                      init_state=state, return_state=True)
+
+
 def _mamba_dims(cfg: ModelConfig):
     din = cfg.ssm_expand * cfg.d_model
     hd = cfg.ssm_head_dim
@@ -98,21 +122,20 @@ class Zamba2(BaseModel):
         xBC = zxbcdt[..., din:2 * din + 2 * N]
         dt = zxbcdt[..., 2 * din + 2 * N:]
         xBC, new_conv = L.causal_conv1d(xBC, p["conv_w"], conv_state)
-        xBC = jax.nn.silu(xBC)
+        xBC = tapir.elemwise(xBC, "silu")
         xc = xBC[..., :din].reshape(B, S, H, hd)
-        Bm = xBC[..., din:din + N]
-        Cm = xBC[..., din + N:]
-        dtv = jax.nn.softplus(dt.astype(jnp.float32) +
-                              p["dt_bias"].astype(jnp.float32))   # [B,S,H]
-        a = jnp.exp(-jnp.exp(jnp.clip(p["A_log"].astype(jnp.float32),
-                                      -6.0, 4.0)) * dtv)          # [B,S,H]
-        w = jnp.broadcast_to(a[..., None], (B, S, H, N))
-        q = jnp.broadcast_to(Cm[:, :, None], (B, S, H, N)).astype(x.dtype)
-        k = (jnp.broadcast_to(Bm[:, :, None], (B, S, H, N))
-             * dtv[..., None]).astype(x.dtype)
+        dtype = str(jnp.dtype(x.dtype))
+        if tapir.is_traced(xBC):
+            q, k, w = tapir.lift(_ssd_gates, xBC, dt, p["dt_bias"],
+                                 p["A_log"], din=din, N=N, H=H, dtype=dtype)
+        else:
+            q, k, w = _ssd_gates(xBC, dt, p["dt_bias"], p["A_log"],
+                                 din=din, N=N, H=H, dtype=dtype)
         if ssm_state is None:
             y = tapir.wkv_scan(q, k, xc, w)
             new_ssm = None
+        elif tapir.is_traced(xBC) or tapir.is_traced(ssm_state):
+            y, new_ssm = tapir.lift(_ssm_step, q, k, xc, w, ssm_state)
         else:
             y, new_ssm = ls_ops.linear_scan_chunked(
                 q, k, xc, w, chunk=64, init_state=ssm_state,
@@ -120,25 +143,42 @@ class Zamba2(BaseModel):
         y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
             xc.astype(jnp.float32)
         y = y.reshape(B, S, din).astype(x.dtype)
-        y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+        y = L.rmsnorm(y * tapir.elemwise(z, "silu"), p["norm"])
         out = tapir.linear(y, p["w_out"])
         return out, new_conv, new_ssm
 
+    def _mamba_block_body(self, p, x):
+        y, _, _ = self._ssd(p, L.rmsnorm(x, p["ln"]))
+        return x + y
+
+    def _mamba_step_body(self, p, x, conv, ssm):
+        """One Mamba2 block threading (conv, ssm) state — stateful region."""
+        y, conv, ssm = self._ssd(p, L.rmsnorm(x, p["ln"]),
+                                 conv_state=conv, ssm_state=ssm)
+        return x + y, conv, ssm
+
     def _mamba_body(self, cdt):
+        # whole-region capture: in-proj, causal conv, SSD gates, the scan,
+        # gated rmsnorm and out-proj trace into ONE TaskGraph per block
+        blk = tapir.parallel_region(self._mamba_block_body,
+                                    name="mamba_block")
+
         def body(p, x):
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            y, _, _ = self._ssd(p, L.rmsnorm(x, p["ln"]))
-            return shard_act(x + y, "batch", "seq", None)
+            return shard_act(blk(p, x), "batch", "seq", None)
         return body
 
     def _shared_block(self, params, x, cos, sin, cdt, kv_cache=None):
         hp = self._attn_helper
         p = jax.tree_util.tree_map(lambda a: a.astype(cdt), params["shared"])
-        a, kv = hp._attn(p, hp._norm(x, p["ln1"]), cos, sin,
-                         kv_cache=kv_cache)
-        x = x + a
-        x = x + hp._mlp(p, hp._norm(x, p["ln2"]))
-        return shard_act(x, "batch", "seq", None), kv
+        if kv_cache is None:
+            # forward: reuse the dense helper's region-wrapped block
+            return hp._block(p, x, cos, sin), None
+        ck, cv, pos0, is_prefill = kv_cache
+        blk = tapir.parallel_region(hp._cached_block_body,
+                                    name="zamba_shared_cached_block")
+        x, ck, cv = blk(p, x, cos, sin, ck, cv, pos0, is_prefill)
+        return shard_act(x, "batch", "seq", None), (ck, cv)
 
     # -- forward ----------------------------------------------------------
     def _stack(self, params, h, positions, cdt):
@@ -210,12 +250,14 @@ class Zamba2(BaseModel):
         positions = pos0 + jnp.arange(tokens.shape[1])
         cos, sin = L.rope_table(positions, cfg.hd)
 
+        blk = tapir.parallel_region(self._mamba_step_body,
+                                    name="mamba_stateful_block")
+
         def body(x, xs):
             p, conv, ssm = xs
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            y, conv, ssm = self._ssd(p, L.rmsnorm(x, p["ln"]),
-                                     conv_state=conv, ssm_state=ssm)
-            return x + y, (conv, ssm)
+            x, conv, ssm = blk(p, x, conv, ssm)
+            return x, (conv, ssm)
 
         per, G = cfg.shared_attn_every, self.n_groups
         blocks = params["blocks"]

@@ -211,10 +211,13 @@ class MoELM(DenseLM):
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
             return self._block(p, x, cos, sin)
 
+        attn_blk = tapir.parallel_region(self._attn_body, name="moe_attn")
+
         def moe_body(p, x):
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            a, _ = self._attn(p, self._norm(x, p["ln1"]), cos, sin)
-            x = x + a
+            # attention sub-block traces as one region; the MoE dispatch
+            # (data-dependent top-k routing + scatter) stays per-op
+            x = attn_blk(p, x, cos, sin)
             x = x + self._moe_ffn(p, self._norm(x, p["ln2"]))
             return shard_act(x, "batch", "seq", None)
 
@@ -256,16 +259,25 @@ class MoELM(DenseLM):
                                 fraction=0.5 if cfg.rope == "half" else 1.0)
         pos0 = cache["pos"]
 
+        dense_blk = tapir.parallel_region(self._cached_block_body,
+                                          name="moe_dense_cached_block")
+        attn_blk = tapir.parallel_region(self._cached_attn_body,
+                                         name="moe_cached_attn")
+
         def body_factory(is_moe):
             def body(carry, xs):
                 x = carry
                 p, ck, cv = xs
                 p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-                a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
-                                         kv_cache=(ck, cv, pos0, is_prefill))
-                x = x + a
-                mlp = self._moe_ffn if is_moe else self._mlp
-                x = x + mlp(p, self._norm(x, p["ln2"]))
+                if is_moe:
+                    # attention + cache writes region-capture; the routed
+                    # expert FFN stays per-op (data-dependent scatter)
+                    x, ck, cv = attn_blk(p, x, cos, sin, ck, cv, pos0,
+                                         is_prefill)
+                    x = x + self._moe_ffn(p, self._norm(x, p["ln2"]))
+                else:
+                    x, ck, cv = dense_blk(p, x, cos, sin, ck, cv, pos0,
+                                          is_prefill)
                 return x, (ck, cv)
             return body
 

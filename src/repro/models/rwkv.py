@@ -25,6 +25,18 @@ from .base import BaseModel, ModelConfig, ParamSpec, register_family
 LORA_RANK = 64
 
 
+def _decay_from_lora(lora, w0):
+    logw = w0.astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 2.0)))
+
+
+def _wkv_step(r, k, v, w, u, state):
+    """Stateful WKV step (decode): one chunked scan carrying the [B,H,Dk,Dv]
+    state in and out — the SSM-state analogue of a KV-cache write."""
+    return ls_ops.linear_scan_chunked(r, k, v, w, u=u, init_state=state,
+                                      return_state=True)
+
+
 def _rwkv_block_specs(cfg: ModelConfig, n_layers: int) -> dict:
     d, ff = cfg.d_model, cfg.d_ff
     H, hd = cfg.n_heads, cfg.hd
@@ -71,9 +83,11 @@ class RWKV6(BaseModel):
     # -- block ------------------------------------------------------------
     def _decay(self, p, xw):
         """w_t = exp(-exp(w0 + tanh(xw @ A) @ B))  in (0, 1)."""
-        lora = tapir.linear(jnp.tanh(tapir.linear(xw, p["wA"])), p["wB"])
-        logw = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
-        return jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 2.0)))
+        lora = tapir.linear(tapir.linear(xw, p["wA"], activation="tanh"),
+                            p["wB"])
+        if tapir.is_traced(lora):
+            return tapir.lift(_decay_from_lora, lora, p["w0"])
+        return _decay_from_lora(lora, p["w0"])
 
     def _time_mix(self, p, x, shift_state=None, wkv_state=None):
         cfg = self.cfg
@@ -93,6 +107,8 @@ class RWKV6(BaseModel):
         if wkv_state is None:
             o = tapir.wkv_scan(r, k, v, w.astype(jnp.float32), u)
             new_wkv = None
+        elif any(tapir.is_traced(t) for t in (r, k, v, w, wkv_state)):
+            o, new_wkv = tapir.lift(_wkv_step, r, k, v, w, u, wkv_state)
         else:
             o, new_wkv = ls_ops.linear_scan_chunked(
                 r, k, v, w, u=u, init_state=wkv_state,
@@ -109,11 +125,27 @@ class RWKV6(BaseModel):
         rgate = tapir.linear(mix(p["mu_cr"]), p["wcr"], activation="sigmoid")
         return tapir.linear(k, p["wcv"]) * rgate, new_shift
 
-    def _block(self, p, x):
+    def _block_body(self, p, x):
         a, _, _ = self._time_mix(p, L.rmsnorm(x, p["ln1"]))
         x = x + a
         c, _ = self._channel_mix(p, L.rmsnorm(x, p["ln2"]))
-        return shard_act(x + c, "batch", "seq", None)
+        return x + c
+
+    def _block(self, p, x):
+        # whole-region capture: time-mix (r/k/v/g projections, decay LoRA,
+        # WKV scan, groupnorm, gate) + channel-mix trace into ONE TaskGraph
+        blk = tapir.parallel_region(self._block_body, name="rwkv_block")
+        return shard_act(blk(p, x), "batch", "seq", None)
+
+    def _stateful_block_body(self, p, x, tm, cm, wkv):
+        """One RWKV block threading its (token-shift, WKV) state through —
+        the wkv state update is the same stateful-capture problem as a KV
+        cache, traced here as a single region."""
+        a, tm, wkv = self._time_mix(p, L.rmsnorm(x, p["ln1"]),
+                                    shift_state=tm, wkv_state=wkv)
+        x = x + a
+        c, cm = self._channel_mix(p, L.rmsnorm(x, p["ln2"]), shift_state=cm)
+        return x + c, tm, cm, wkv
 
     # -- forward ----------------------------------------------------------
     def forward(self, params, batch: dict):
@@ -158,15 +190,14 @@ class RWKV6(BaseModel):
         cdt = jnp.dtype(cfg.compute_dtype)
         h = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
 
+        blk = tapir.parallel_region(self._stateful_block_body,
+                                    name="rwkv_stateful_block")
+
         def body(x, xs):
             p, tm, cm, wkv = xs
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            a, tm, wkv = self._time_mix(p, L.rmsnorm(x, p["ln1"]),
-                                        shift_state=tm, wkv_state=wkv)
-            x = x + a
-            c, cm = self._channel_mix(p, L.rmsnorm(x, p["ln2"]),
-                                      shift_state=cm)
-            return x + c, (tm, cm, wkv)
+            x, tm, cm, wkv = blk(p, x, tm, cm, wkv)
+            return x, (tm, cm, wkv)
 
         h, (tm, cm, wkv) = jax.lax.scan(
             body, h, (params["blocks"], cache["tm_shift"],

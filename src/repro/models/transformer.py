@@ -79,15 +79,17 @@ class DenseLM(BaseModel):
             o = tapir.attention(q, k, v, causal=causal)
         else:
             ck, cv, cpos, is_prefill = kv_cache
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, cpos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, cpos, 0, 0))
+            # stateful capture: inside a region these become
+            # dynamic_update_slice nodes that DONATE the cache buffers, so
+            # the region jit writes the KV cache in place; outside they are
+            # plain lax.dynamic_update_slice (identical numerics)
+            ck = tapir.cache_write(ck, k, (0, cpos, 0, 0))
+            cv = tapir.cache_write(cv, v, (0, cpos, 0, 0))
             if is_prefill:
                 # flash path over the fresh K/V (cache only written)
                 o = tapir.attention(q, k, v, causal=True)
             else:
-                o = _masked_decode_attention(q, ck, cv, cpos + S)
+                o = _decode_attention(q, ck, cv, cpos + S)
             kv_cache = (ck, cv)
         o = o.reshape(B, S, H * hd)
         out = tapir.linear(o, p["wo"])
@@ -104,9 +106,14 @@ class DenseLM(BaseModel):
         return L.rmsnorm(x, scale) if self.cfg.norm == "rmsnorm" \
             else L.layernorm(x, scale)
 
-    def _block_body(self, p, x, cos, sin):
+    def _attn_body(self, p, x, cos, sin):
+        """Attention sub-block (norm + attn + residual) — region-wrapped on
+        its own by families whose FFN can't trace (MoE routing)."""
         a, _ = self._attn(p, self._norm(x, p["ln1"]), cos, sin)
-        x = x + a
+        return x + a
+
+    def _block_body(self, p, x, cos, sin):
+        x = self._attn_body(p, x, cos, sin)
         return x + self._mlp(p, self._norm(x, p["ln2"]))
 
     def _block(self, p, x, cos, sin):
@@ -177,6 +184,25 @@ class DenseLM(BaseModel):
                 "v": ("layers", "batch", "kvseq", "kv", None),
                 "pos": ()}
 
+    def _cached_attn_body(self, p, x, cos, sin, ck, cv, pos0,
+                          is_prefill: bool):
+        """Attention sub-block against its KV-cache slab (stateful)."""
+        a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
+                                 kv_cache=(ck, cv, pos0, is_prefill))
+        return x + a, ck, cv
+
+    def _cached_block_body(self, p, x, cos, sin, ck, cv, pos0,
+                           is_prefill: bool):
+        """One transformer block against its KV-cache slab.  Under region
+        capture (``tapir.parallel_region`` below) the whole step — norms,
+        QKV, RoPE, the cache writes, masked decode attention, O-projection,
+        residuals and the MLP — traces into ONE TaskGraph, executes as a
+        single cached jit, and the cache writes donate their buffers."""
+        x, ck, cv = self._cached_attn_body(p, x, cos, sin, ck, cv, pos0,
+                                           is_prefill)
+        x = x + self._mlp(p, self._norm(x, p["ln2"]))
+        return x, ck, cv
+
     def _run_with_cache(self, params, tokens, cache, positions,
                         is_prefill: bool):
         cfg = self.cfg
@@ -185,15 +211,14 @@ class DenseLM(BaseModel):
         cos, sin = L.rope_table(positions, cfg.hd,
                                 fraction=0.5 if cfg.rope == "half" else 1.0)
         pos0 = cache["pos"]
+        blk = tapir.parallel_region(self._cached_block_body,
+                                    name="dense_cached_block")
 
         def body(carry, xs):
             x = carry
             p, ck, cv = xs
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
-                                     kv_cache=(ck, cv, pos0, is_prefill))
-            x = x + a
-            x = x + self._mlp(p, self._norm(x, p["ln2"]))
+            x, ck, cv = blk(p, x, cos, sin, ck, cv, pos0, is_prefill)
             return x, (ck, cv)
 
         h, (ck, cv) = jax.lax.scan(body, h,
@@ -216,6 +241,18 @@ class DenseLM(BaseModel):
         return logits[:, -1], cache
 
 
+def _decode_attention(q, ck, cv, valid_len):
+    """Traced-aware wrapper: inside a region the masked cache attention
+    captures as one ``pyfunc`` node (ordered after the cache writes it
+    reads); outside it runs as one jitted composite (same dispatch cost as
+    a library call, bitwise-identical to the region's node)."""
+    if any(tapir.is_traced(t) for t in (q, ck, cv, valid_len)):
+        vl = valid_len if hasattr(valid_len, "shape") else jnp.asarray(
+            valid_len, jnp.int32)
+        return tapir.lift(_masked_decode_attention, q, ck, cv, vl)
+    return _masked_decode_attention_jit(q, ck, cv, valid_len)
+
+
 def _masked_decode_attention(q, ck, cv, valid_len):
     """Composite masked attention over a static-length KV cache.
     q: [B,S,H,hd], ck/cv: [B,maxlen,Hkv,hd]; positions >= valid_len masked."""
@@ -233,3 +270,6 @@ def _masked_decode_attention(q, ck, cv, valid_len):
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+_masked_decode_attention_jit = jax.jit(_masked_decode_attention)

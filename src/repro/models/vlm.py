@@ -47,20 +47,21 @@ class InternVLM(DenseLM):
         return logits, cache
 
     def _run_embeds_with_cache(self, params, h, cache, positions):
+        from repro.core import tapir
+
         from . import layers as L
         cfg = self.cfg
         cdt = jnp.dtype(cfg.compute_dtype)
         cos, sin = L.rope_table(positions, cfg.hd)
         pos0 = cache["pos"]
+        blk = tapir.parallel_region(self._cached_block_body,
+                                    name="vlm_prefill_block")
 
         def body(carry, xs):
             x = carry
             p, ck, cv = xs
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            a, (ck, cv) = self._attn(p, self._norm(x, p["ln1"]), cos, sin,
-                                     kv_cache=(ck, cv, pos0, True))
-            x = x + a
-            x = x + self._mlp(p, self._norm(x, p["ln2"]))
+            x, ck, cv = blk(p, x, cos, sin, ck, cv, pos0, True)
             return x, (ck, cv)
 
         h, (ck, cv) = jax.lax.scan(body, h,

@@ -9,6 +9,17 @@ bytes shrink by the TP degree.  Batch shards over (pod, data).
 
 ``ServingEngine`` is the host-side loop: continuous batching over a request
 queue, greedy sampling, per-request stop handling.
+
+With ``ServeConfig.regions=True`` (default) prefill and decode run through
+*stateful region capture*: each block of ``model.decode_step`` — including
+the KV-cache ``dynamic_update_slice`` writes — traces into one TaskGraph,
+compiles once, and executes as a single jit.  The region jit marks its
+cache inputs donated; that donation takes effect when regions execute at
+top level (library-call usage, the ``decode_region_vs_per_op`` benchmark
+regime).  Under ``make_decode_step``'s outer ``jax.jit`` the inner
+donation is inlined away and the in-place cache update comes from the
+OUTER jit's ``donate_argnums=(2,)`` instead — either way decode never
+copies the cache per step.  ``regions=False`` is the per-op control.
 """
 from __future__ import annotations
 
@@ -33,10 +44,17 @@ class ServeConfig:
     max_len: int = 2048
     greedy: bool = True
     target: str = "tpu"     # schedule cost model: "tpu" | "cpu"
+    # stateful region capture: each decode block (QKV, RoPE, KV-cache
+    # writes, masked attention, MLP) traces into ONE TaskGraph and runs as
+    # a single cached jit per step (cache donation applies at the outermost
+    # jit — see module docstring).  False = per-op control (the
+    # decode_region_vs_per_op A/B).
+    regions: bool = True
 
     def tapir_config(self) -> TapirConfig:
         cm = CostModel() if self.target == "tpu" else CPU_COST_MODEL
-        return TapirConfig(mode=self.mode, cost_model=cm)
+        return TapirConfig(mode=self.mode, cost_model=cm,
+                           regions=self.regions)
 
 
 def cache_shardings(model, mesh, batch: int, max_len: int):
@@ -109,7 +127,7 @@ class ServingEngine:
             self._prefill = make_prefill_step(model, mesh, cfg)[0]
             self._decode = make_decode_step(model, mesh, cfg)[0]
         else:
-            tap = TapirConfig(mode=cfg.mode)
+            tap = cfg.tapir_config()
 
             def _pf(params, tokens, cache):
                 with use(tap):
@@ -120,8 +138,11 @@ class ServingEngine:
                     logits, cache = model.decode_step(params, tokens, cache)
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-            self._prefill = jax.jit(_pf)
-            self._decode = jax.jit(_dc)
+            # donate the cache like the mesh path does: the outer jit owns
+            # the in-place update (the region's inner donation inlines away
+            # under an enclosing jit)
+            self._prefill = jax.jit(_pf, donate_argnums=(2,))
+            self._decode = jax.jit(_dc, donate_argnums=(2,))
 
     def run(self, requests: list[Request], max_steps: int = 256) -> list[Request]:
         """Simple continuous batching: group requests into one padded batch

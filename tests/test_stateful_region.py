@@ -1,0 +1,337 @@
+"""Stateful region capture: in-place buffer ops in the Task IR.
+
+* alias safety — a cache write is never CSE'd with another write, orders
+  after every read of the pre-write buffer (anti-deps), and the graph
+  signature distinguishes donated from non-donated writes;
+* donation — the region jit donates cache inputs marked by
+  ``dynamic_update_slice`` nodes, so the caller's buffer storage is reused
+  (checked by buffer-pointer identity), including through the program-cache
+  replay path;
+* decode equivalence — a 2-block dense model's prefill+decode under
+  region capture matches the per-op path, and the RWKV / Mamba / MoE
+  region-wrapped blocks match their per-op forwards;
+* GQA — the cost model picks repeat-K/V for compute-heavy CPU shapes and
+  the grouped einsum when KV bytes dominate; both lowerings agree.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import tapir
+from repro.core.ir import TaskGraph, TensorType
+from repro.core.lowering import _materialized_attention
+from repro.core.passes.cse import cse
+from repro.core.schedule import CPU_COST_MODEL, CostModel, pick_gqa_impl
+from repro.core.tapir import TapirConfig, clear_cache, use
+from repro.models.base import get_model
+
+
+def setup_function(_):
+    clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# IR-level alias safety
+# ---------------------------------------------------------------------------
+
+
+def _write_graph():
+    """input buffer -> read A -> in-place write -> read B"""
+    g = TaskGraph("alias")
+    buf_t = TensorType((4, 8), "float32")
+    win_t = TensorType((4, 1), "float32")
+    buf = g.add_input("buf", buf_t)
+    upd = g.add_input("upd", win_t)
+    r_pre = g.add("dynamic_slice", (buf,), win_t, pdims=(0, 1),
+                  static_starts=(0, 3), sizes=(4, 1))
+    w = g.add("dynamic_update_slice", (buf, upd), buf_t, pdims=(0, 1),
+              donates=buf, static_starts=(0, 3), window=(4, 1))
+    r_post = g.add("dynamic_slice", (w,), win_t, pdims=(0, 1),
+                   static_starts=(0, 3), sizes=(4, 1))
+    g.set_outputs([r_pre, w, r_post])
+    return g, buf, r_pre, w, r_post
+
+
+def test_write_orders_after_prior_reads():
+    g, buf, r_pre, w, r_post = _write_graph()
+    assert r_pre in g.nodes[w].anti, "write must carry an anti-dep on the read"
+    order = g.topo_order()
+    assert order.index(r_pre) < order.index(w) < order.index(r_post)
+
+
+def test_cse_never_merges_writes_and_distinguishes_reads():
+    g = TaskGraph("cse_alias")
+    buf_t = TensorType((4, 8), "float32")
+    win_t = TensorType((4, 1), "float32")
+    buf = g.add_input("buf", buf_t)
+    upd = g.add_input("upd", win_t)
+    w1 = g.add("dynamic_update_slice", (buf, upd), buf_t, pdims=(0, 1),
+               donates=buf, static_starts=(0, 3), window=(4, 1))
+    w2 = g.add("dynamic_update_slice", (buf, upd), buf_t, pdims=(0, 1),
+               donates=buf, static_starts=(0, 3), window=(4, 1))
+    # identical-looking reads of DIFFERENT buffer states must survive CSE
+    r1 = g.add("dynamic_slice", (w1,), win_t, pdims=(0, 1),
+               static_starts=(0, 3), sizes=(4, 1))
+    r2 = g.add("dynamic_slice", (w2,), win_t, pdims=(0, 1),
+               static_starts=(0, 3), sizes=(4, 1))
+    g.set_outputs([r1, r2])
+    cse(g)
+    assert w1 in g.nodes and w2 in g.nodes, "writes must never be CSE'd"
+    assert r1 in g.nodes and r2 in g.nodes
+
+
+def test_signature_distinguishes_donation():
+    def build(donate):
+        g = TaskGraph("sig")
+        buf_t = TensorType((4, 8), "float32")
+        buf = g.add_input("buf", buf_t)
+        upd = g.add_input("upd", TensorType((4, 1), "float32"))
+        w = g.add("dynamic_update_slice", (buf, upd), buf_t, pdims=(0, 1),
+                  donates=buf if donate else None,
+                  static_starts=(0, 3), window=(4, 1))
+        g.set_outputs([w])
+        return g
+    assert build(True).signature() != build(False).signature()
+    assert build(True).donated_inputs() and not build(False).donated_inputs()
+
+
+def test_write_then_read_and_read_then_write_values():
+    """Functional check of the full pipeline: pre-write reads see the old
+    value, post-write reads the new one, under CSE + fusion + jit."""
+    buf = jnp.arange(32, dtype=jnp.float32).reshape(4, 8)
+    upd = jnp.full((4, 1), -1.0)
+    pos = jnp.asarray(3, jnp.int32)
+
+    @tapir.parallel_region
+    def step(buf, upd, pos):
+        before = tapir.cache_read(buf, (0, pos), (4, 1))
+        buf2 = tapir.cache_write(buf, upd, (0, pos), donate=False)
+        after = tapir.cache_read(buf2, (0, pos), (4, 1))
+        return before, buf2, after
+
+    with use(TapirConfig(mode="tapir")):
+        before, buf2, after = step(buf, upd, pos)
+    np.testing.assert_array_equal(np.asarray(before),
+                                  np.asarray(buf[:, 3:4]))
+    np.testing.assert_array_equal(np.asarray(after), np.asarray(upd))
+    ref = np.asarray(buf).copy()
+    ref[:, 3] = -1.0
+    np.testing.assert_array_equal(np.asarray(buf2), ref)
+
+
+def test_at_set_negative_indices_match_jnp():
+    """jnp index-update wraps negative indices; lax.dynamic_update_slice
+    clamps — the traced ``.at[].set`` must normalize (or fall back)."""
+    x = jnp.zeros((4, 2))
+    v = jnp.ones((2, 2))
+
+    @tapir.parallel_region
+    def f(x, v):
+        return (x.at[1:-1].set(v), x.at[-2:].set(v + 1),
+                x.at[-1].set(v[0] + 2))
+
+    with use(TapirConfig(mode="tapir")):
+        a, b, c = f(x, v)
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(x.at[1:-1].set(v)))
+    np.testing.assert_array_equal(np.asarray(b),
+                                  np.asarray(x.at[-2:].set(v + 1)))
+    np.testing.assert_array_equal(np.asarray(c),
+                                  np.asarray(x.at[-1].set(v[0] + 2)))
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+def test_donation_reuses_buffer_storage():
+    big = jnp.zeros((256, 256), jnp.float32)
+    upd = jnp.ones((1, 256))
+
+    @tapir.parallel_region
+    def wr(c, u, pos):
+        return tapir.cache_write(c, u, (pos, 0))
+
+    with use(TapirConfig(mode="tapir")):
+        p0 = big.unsafe_buffer_pointer()
+        c1 = wr(big, upd, jnp.asarray(3, jnp.int32))
+        assert c1.unsafe_buffer_pointer() == p0, \
+            "donated cache buffer must be updated in place"
+        # second call replays through the program cache — still donates
+        p1 = c1.unsafe_buffer_pointer()
+        c2 = wr(c1, upd, jnp.asarray(7, jnp.int32))
+        assert c2.unsafe_buffer_pointer() == p1
+    got = np.asarray(c2)
+    assert got[3].sum() == 256 and got[7].sum() == 256 and got[1].sum() == 0
+
+
+def test_non_donating_write_keeps_input_alive():
+    buf = jnp.zeros((8, 8), jnp.float32)
+
+    @tapir.parallel_region
+    def wr(c, u):
+        return tapir.cache_write(c, u, (0, 0), donate=False)
+
+    with use(TapirConfig(mode="tapir")):
+        out = wr(buf, jnp.ones((1, 8)))
+    # input must still be readable (not donated)
+    assert float(jnp.sum(buf)) == 0.0
+    assert float(jnp.sum(out)) == 8.0
+
+
+# ---------------------------------------------------------------------------
+# decode: region == per-op on a 2-block model
+# ---------------------------------------------------------------------------
+
+
+def _decode_both(arch: str, n_new: int = 3):
+    cfg = dataclasses.replace(C.get_smoke(arch), compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, 100, size=(2, 8 + n_new)), jnp.int32)
+    outs = {}
+    for regions in (False, True):
+        clear_cache()
+        with use(TapirConfig(mode="tapir", regions=regions)):
+            cache = model.init_cache(2, 8 + n_new + 2)
+            logits, cache = model.prefill(params, toks[:, :8], cache)
+            seq = [np.asarray(logits)]
+            for t in range(n_new):
+                logits, cache = model.decode_step(
+                    params, toks[:, 8 + t: 8 + t + 1], cache)
+                seq.append(np.asarray(logits))
+        outs[regions] = seq
+    return outs
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_3b", "rwkv6_7b", "zamba2_7b",
+                                  "moonshot_v1_16b_a3b"])
+def test_decode_region_matches_per_op(arch):
+    outs = _decode_both(arch)
+    for t, (a, b) in enumerate(zip(outs[False], outs[True])):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{arch} step {t}")
+
+
+@pytest.mark.parametrize("arch", ["rwkv6_7b", "zamba2_7b"])
+def test_forward_region_matches_per_op_ssm(arch):
+    cfg = dataclasses.replace(C.get_smoke(arch), compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(1, 100, (2, 12)), jnp.int32)}
+    clear_cache()
+    with use(TapirConfig(mode="tapir", regions=False)):
+        ref = np.asarray(model.forward(params, batch))
+    clear_cache()
+    with use(TapirConfig(mode="tapir", regions=True)):
+        got = np.asarray(model.forward(params, batch))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_block_captures_as_one_region():
+    """The RWKV block (r/k/v/g projections, decay LoRA, WKV scan,
+    groupnorm, channel mix) must trace into ONE multi-library-op graph
+    with no mid-region flush."""
+    cfg = dataclasses.replace(C.get_smoke("rwkv6_7b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    p = jax.tree_util.tree_map(lambda a: a[0].astype(jnp.float32),
+                               params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.capture_region(model._block_body, p, x)
+    from repro.core.ir import LIBRARY_OPS
+    libs = [n.op for n in g.nodes.values() if n.op in LIBRARY_OPS]
+    assert len(libs) >= 5, f"expected a merged multi-op graph, got {libs}"
+    assert "linear_scan" in libs
+
+
+def test_dense_decode_block_graph_has_donated_cache_writes():
+    """Structural: the dense cached-block region contains two
+    dynamic_update_slice nodes donating the two cache inputs."""
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    p = jax.tree_util.tree_map(lambda a: a[0].astype(jnp.float32),
+                               params["blocks"])
+    B, S, maxlen = 2, 1, 16
+    from repro.models import layers as L
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model))
+    ck = jnp.zeros((B, maxlen, cfg.n_kv_heads, cfg.hd), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    pos0 = jnp.asarray(4, jnp.int32)
+    cos, sin = L.rope_table(pos0 + jnp.arange(S), cfg.hd)
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.capture_region(model._cached_block_body, p, x, cos, sin,
+                                 ck, cv, pos0, False)
+    writes = [n for n in g.nodes.values() if n.op == "dynamic_update_slice"]
+    assert len(writes) == 2
+    assert all(w.donates is not None for w in writes)
+    assert len(g.donated_inputs()) == 2
+
+
+# ---------------------------------------------------------------------------
+# GQA cost-model choice
+# ---------------------------------------------------------------------------
+
+
+def _attn_node(b, s, skv, h, hkv, d):
+    g = TaskGraph("a")
+    t = TensorType((b, s, h, d), "float32")
+    q = g.add_input("q", t)
+    k = g.add_input("k", TensorType((b, skv, hkv, d), "float32"))
+    v = g.add_input("v", TensorType((b, skv, hkv, d), "float32"))
+    nid = g.add("attention", (q, k, v), t, pdims=(0, 1, 2),
+                rdims=(("kv", skv),), causal=True, q_shape=(b, s, h, d),
+                kv_len=skv, kv_heads=hkv)
+    return g.nodes[nid]
+
+
+def test_gqa_impl_choice_is_backend_and_shape_aware():
+    # forward-ish shape on CPU: copy amortizes against S*Skv compute
+    n = _attn_node(8, 256, 256, 8, 2, 64)
+    assert pick_gqa_impl(n, CPU_COST_MODEL, "cpu") == "repeat"
+    # decode against a long cache: KV bytes dominate -> grouped
+    n = _attn_node(8, 1, 32768, 8, 2, 64)
+    assert pick_gqa_impl(n, CPU_COST_MODEL, "cpu") == "grouped"
+    # TPU target: always grouped (flash kernel path, no HBM copy)
+    n = _attn_node(8, 256, 256, 8, 2, 64)
+    assert pick_gqa_impl(n, CostModel(), "tpu") == "grouped"
+    # MHA (no grouping): nothing to repeat
+    n = _attn_node(8, 256, 256, 8, 8, 64)
+    assert pick_gqa_impl(n, CPU_COST_MODEL, "cpu") == "grouped"
+
+
+def test_gqa_grouped_and_repeat_agree_numerically():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (2, 32, 8, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 32, 2, 16))
+    for causal in (False, True):
+        a = _materialized_attention(q, k, v, causal, None, grouped=True)
+        b = _materialized_attention(q, k, v, causal, None, grouped=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_schedule_note_recorded():
+    """The scheduled graph records which impl the cost model picked."""
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (8, 256, 8, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (8, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (8, 256, 2, 64))
+    clear_cache()
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.trace_region(
+            lambda q, k, v: tapir.attention(q, k, v, causal=True), q, k, v)
+    att = [n for n in g.nodes.values() if n.op == "attention"][0]
+    assert att.attrs["gqa_impl"] == "repeat"

@@ -289,11 +289,98 @@ def bench_decode_region_vs_per_op(iters: int = 3, steps: int = 16,
     return out
 
 
+# ---------------------------------------------------------------------------
+# serve_continuous_vs_wave: slot-paged continuous batching (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_continuous_vs_wave(iters: int = 3, slots: int = 4,
+                                   json_path="BENCH_serve.json"):
+    """Tokens/sec on MIXED-length requests: continuous slot scheduling
+    (admit into free slots mid-decode, free on finish) vs wave scheduling
+    (admit a full batch, block until its slowest member drains).  Both run
+    the SAME slot primitives — one region program per block replayed from
+    ``_PROGRAMS`` at every occupancy — so the outputs are bitwise-identical
+    per request and the speedup isolates scheduler utilization."""
+    import dataclasses
+
+    import repro.configs as C
+    from repro.models.base import get_model
+    from repro.serve import Request, ServeConfig, ServingEngine
+
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    plens = [6, 4, 7, 5, 6, 3, 7, 4, 6, 5, 4, 7]
+    news = [4, 60, 6, 40, 8, 56, 4, 28, 6, 64, 12, 44]   # heavy mix
+    prompts = [rng.integers(1, 100, size=n).astype(np.int32) for n in plens]
+
+    def mk():
+        return [Request(rid=i, prompt=p.copy(), max_new=m)
+                for i, (p, m) in enumerate(zip(prompts, news))]
+
+    clear_cache()
+    eng = ServingEngine(model, params, batch=slots, max_len=128,
+                        cfg=ServeConfig(target="cpu"))
+    # warmup compiles every program (prefill buckets, decode, heads);
+    # both schedulers replay the same cache afterwards
+    ref = eng.run(mk(), max_steps=4096)
+    eng.run_wave(mk(), max_steps=4096)
+
+    # donation: the slot pages must update IN PLACE across decode steps
+    # (scatter donation through the program-replay path)
+    with use(ServeConfig(target="cpu").tapir_config()):
+        sp = model.slot_params(params)
+        cache = model.init_slot_cache(slots, 128)
+        _, cache = model.prefill_into_slot(
+            sp, jnp.zeros((1, 8), jnp.int32), cache, 0, 6)
+        ptrs = [c.unsafe_buffer_pointer() for c in cache["k"]]
+        step_toks = jnp.zeros((slots, 1), jnp.int32)
+        for _ in range(2):
+            _, cache = model.decode_step_slots(sp, step_toks, cache)
+        donated = [c.unsafe_buffer_pointer()
+                   for c in cache["k"]] == ptrs
+    print(f"serve_continuous_vs_wave slot pages donated: {donated}")
+
+    results = {}
+    for label, runner in (("wave", eng.run_wave), ("continuous", eng.run)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = runner(mk(), max_steps=4096)
+        t = (time.perf_counter() - t0) / iters
+        toks = sum(len(r.out) for r in out)
+        results[label] = {"wall_s": t, "tokens": toks,
+                          "tok_per_s": toks / t}
+        print(f"serve_continuous_vs_wave {label:10s} {t*1e3:9.1f} ms "
+              f"({toks} tokens, {toks/t:8.1f} tok/s)")
+        bitwise = all(a.out == b.out and a.done and b.done
+                      for a, b in zip(ref, out))
+        results[label]["bitwise_match"] = bitwise
+    speedup = (results["continuous"]["tok_per_s"]
+               / results["wave"]["tok_per_s"])
+    bitwise = bool(results["wave"]["bitwise_match"]
+                   and results["continuous"]["bitwise_match"])
+    print(f"serve_continuous_vs_wave speedup: {speedup:.2f}x "
+          f"(bitwise={bitwise})")
+    out = {"wave": results["wave"], "continuous": results["continuous"],
+           "speedup": speedup, "bitwise_match": bitwise,
+           "donated": bool(donated),
+           "config": {"slots": slots, "requests": len(news),
+                      "max_new": news, "prompt_lens": plens}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
                     choices=["all", "region_vs_per_op",
-                             "decode_region_vs_per_op"])
+                             "decode_region_vs_per_op",
+                             "serve_continuous_vs_wave"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -305,6 +392,10 @@ def main():
     if args.case == "decode_region_vs_per_op":
         bench_decode_region_vs_per_op(
             iters=args.iters, json_path=args.json or "BENCH_decode.json")
+        return
+    if args.case == "serve_continuous_vs_wave":
+        bench_serve_continuous_vs_wave(
+            iters=args.iters, json_path=args.json or "BENCH_serve.json")
         return
 
     key = jax.random.PRNGKey(0)

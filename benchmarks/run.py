@@ -21,17 +21,22 @@ import numpy as np
 
 
 def check(out_dir: str, min_region_speedup: float = 1.5,
-          min_decode_speedup: float = 1.3) -> int:
-    """Perf regression gate: run the two region benchmarks and FAIL
-    (non-zero exit) if region_vs_per_op drops below ``min_region_speedup``
-    or decode_region_vs_per_op below ``min_decode_speedup`` / loses
-    bitwise-match / stops donating cache buffers."""
+          min_decode_speedup: float = 1.3,
+          min_serve_speedup: float = 1.3) -> int:
+    """Perf regression gate: run the two region benchmarks plus the
+    continuous-batching benchmark and FAIL (non-zero exit) if
+    region_vs_per_op drops below ``min_region_speedup``,
+    decode_region_vs_per_op below ``min_decode_speedup``,
+    serve_continuous_vs_wave below ``min_serve_speedup``, or any of them
+    loses bitwise-match / stops donating cache buffers."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
         iters=10, json_path=os.path.join(out_dir, "BENCH_region.json"))
     dv = kernel_bench.bench_decode_region_vs_per_op(
         json_path=os.path.join(out_dir, "BENCH_decode.json"))
+    sv = kernel_bench.bench_serve_continuous_vs_wave(
+        json_path=os.path.join(out_dir, "BENCH_serve.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -43,13 +48,23 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         failures.append("decode region no longer bitwise-matches per-op")
     if not dv["donated"]:
         failures.append("decode cache buffers no longer donated")
+    if sv["speedup"] < min_serve_speedup:
+        failures.append(f"serve_continuous_vs_wave tokens/sec speedup "
+                        f"{sv['speedup']:.2f}x < {min_serve_speedup}x")
+    if not sv["bitwise_match"]:
+        failures.append("continuous batching no longer bitwise-matches "
+                        "wave scheduling per request")
+    if not sv["donated"]:
+        failures.append("slot cache pages no longer donated across "
+                        "decode steps")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
             print(" -", f)
         return 1
     print(f"CHECK OK: region {rv['speedup']:.2f}x, "
-          f"decode {dv['speedup']:.2f}x, bitwise, donated")
+          f"decode {dv['speedup']:.2f}x, "
+          f"serve {sv['speedup']:.2f}x, bitwise, donated")
     return 0
 
 

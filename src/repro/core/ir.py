@@ -68,6 +68,19 @@ PRIMITIVE_OPS = frozenset({
     # lowered jit updates the cache in place; ``index`` is static basic
     # indexing (integers + slices) on a traced tensor.
     "dynamic_slice", "dynamic_update_slice", "index",
+    # data-dependent indexing: the index operands are GRAPH VALUES (input
+    # nids), not static attrs — per-slot cache writes and MoE top-k routing
+    # stay inside the region graph instead of flushing it.  ``gather`` is
+    # integer-array indexing over the leading ``n_idx`` axes
+    # (``src[i0, i1, ...]``); ``scatter`` writes ``upd`` at those positions
+    # (mode "set"/"add", out-of-bounds dropped) and follows the same
+    # aliasing discipline as ``dynamic_update_slice``: never CSE'd, and
+    # when it donates its buffer it orders after every read of the
+    # pre-write buffer via anti edges (a non-donating scatter is pure
+    # dataflow — its readers order through the value edge alone).
+    # ``zero_init=True`` scatters into a fresh zeros buffer (no buffer
+    # input — MoE expert dispatch).
+    "gather", "scatter",
 })
 LIBRARY_OPS = frozenset({"matmul", "attention", "linear_scan", "conv2d"})
 
@@ -132,11 +145,12 @@ class Node:
     def bytes_moved(self, update_ttype: Optional[TensorType] = None) -> float:
         """HBM traffic of a cache op (the cost model's bandwidth term).
 
-        ``dynamic_update_slice``: the update's bytes when the buffer is
-        donated (in-place write), else update + a full copy of the buffer
-        (XLA materializes the new value).  ``dynamic_slice``/``slice``/
-        ``index``: the bytes of the window read."""
-        if self.op == "dynamic_update_slice":
+        ``dynamic_update_slice``/``scatter``: the update's bytes when the
+        buffer is donated (in-place write), else update + a full copy of
+        the buffer (XLA materializes the new value; a zero-init scatter
+        additionally writes the whole fresh buffer).  ``dynamic_slice``/
+        ``slice``/``index``/``gather``: the bytes of the window read."""
+        if self.op in ("dynamic_update_slice", "scatter"):
             upd = update_ttype.bytesize if update_ttype is not None else 0
             if self.donates is not None:
                 return float(upd)

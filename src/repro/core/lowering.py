@@ -273,6 +273,24 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
         starts = _resolve_starts(node, env, node.inputs[2:])
         upd = jnp.asarray(upd).astype(buf.dtype).reshape(node.attrs["window"])
         return jax.lax.dynamic_update_slice(buf, upd, starts)
+    if op == "gather":
+        src = env[node.inputs[0]]
+        idx = tuple(env[i] for i in node.inputs[1:])
+        return src[idx]
+    if op == "scatter":
+        n_idx = node.attrs["n_idx"]
+        if node.attrs.get("zero_init", False):
+            buf = jnp.zeros(node.ttype.shape, node.ttype.dtype)
+            rest = node.inputs
+        else:
+            buf = env[node.inputs[0]]
+            rest = node.inputs[1:]
+        idx = tuple(env[i] for i in rest[:n_idx])
+        upd = jnp.asarray(env[rest[n_idx]]).astype(buf.dtype)
+        at = buf.at[idx]
+        if node.attrs.get("mode", "set") == "add":
+            return at.add(upd, mode="drop")
+        return at.set(upd, mode="drop")
     if op == "matmul":
         return _lower_matmul(node, env, backend, bf16_partials)
     if op == "attention":

@@ -16,10 +16,12 @@ def cse(g: TaskGraph) -> int:
         node = g.nodes[nid]
         if node.op == "input" or node.epilogue:
             continue
-        if node.donates is not None:
+        if node.donates is not None or node.op == "scatter":
             # in-place buffer write: hash-consing two writes would collapse
             # distinct buffer states (and double-donate one input) — each
-            # write is its own event, never CSE'd.
+            # write is its own event, never CSE'd.  Scatter is skipped even
+            # when non-donating (data-dependent write: keep every event
+            # distinct rather than reason about index-operand equality).
             continue
         key = node.key()
         if key in seen and seen[key] != nid:

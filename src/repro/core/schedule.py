@@ -140,7 +140,8 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskG
       4. everything else is ``serial`` — small-task serialization.
     Library ops additionally get strip-mined tiles and (on TPU) the Pallas
     kernel lowering flag."""
-    cache_ops = ("dynamic_update_slice", "dynamic_slice", "index", "slice")
+    cache_ops = ("dynamic_update_slice", "dynamic_slice", "index", "slice",
+                 "gather", "scatter")
     for nid in g.topo_order():
         node = g.nodes[nid]
         if node.op in ("input", "const"):
@@ -151,8 +152,14 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskG
         # serialization) is bytes moved, not arithmetic
         moved = None
         if node.op in cache_ops:
-            upd_t = (g.nodes[node.inputs[1]].ttype
-                     if node.op == "dynamic_update_slice" else None)
+            if node.op == "dynamic_update_slice":
+                upd_t = g.nodes[node.inputs[1]].ttype
+            elif node.op == "scatter":
+                # the update is the last input (after buffer + index
+                # operands; zero-init scatters have no buffer input)
+                upd_t = g.nodes[node.inputs[-1]].ttype
+            else:
+                upd_t = None
             moved = node.bytes_moved(upd_t)
             node.schedule.notes.append(
                 f"cache-op {moved:.0f}B moved"

@@ -327,9 +327,14 @@ class TracedTensor:
     # -- indexing --------------------------------------------------------
     def __getitem__(self, item):
         """Basic static indexing (ints/slices/Ellipsis) stays lazy as an
-        ``index`` node; anything fancier (array indices, booleans) falls
-        back through the flush escape hatch."""
+        ``index`` node; integer-array indexing (traced or concrete) stays
+        lazy as a ``gather`` node whose index operands are graph values;
+        anything fancier (booleans, mixed forms) falls back through the
+        flush escape hatch."""
         reg = self._region
+        items = item if isinstance(item, tuple) else (item,)
+        if not reg.closed and items and all(_is_int_array(s) for s in items):
+            return gather(self, items)
         enc = _encode_index(item)
         if reg.closed or enc is None:
             return self.jax()[item]
@@ -367,8 +372,12 @@ class _TracedAtIdx:
     def set(self, value, donate: bool = False):
         """In-bounds window set.  Out-of-bounds *dynamic* (scalar-array)
         starts follow ``lax.dynamic_update_slice`` clamp semantics, not
-        jnp's drop — cache positions must stay within capacity."""
+        jnp's drop — cache positions must stay within capacity.  Integer-
+        ARRAY indices record a ``scatter`` node instead (jnp drop
+        semantics: out-of-bounds updates are discarded)."""
         t = self._t
+        if self._idx and all(_is_int_array(s) for s in self._idx):
+            return scatter(t, self._idx, value, mode="set", donate=donate)
         idx = self._idx + (slice(None),) * (t.ndim - len(self._idx))
         starts, window = [], []
         for d, (s, extent) in enumerate(zip(idx, t.shape)):
@@ -400,11 +409,32 @@ class _TracedAtIdx:
         return cache_write(t, value, tuple(starts), window=tuple(window),
                            donate=donate)
 
+    def add(self, value, donate: bool = False):
+        """Scatter-add at integer-array indices (the MoE dispatch form);
+        other index shapes fall back to concrete jnp."""
+        t = self._t
+        if self._idx and all(_is_int_array(s) for s in self._idx):
+            return scatter(t, self._idx, value, mode="add", donate=donate)
+        v = value.jax() if isinstance(value, TracedTensor) else value
+        return jnp.asarray(t.jax()).at[self._idx].add(v)
+
 
 def _at_set_fallback(t: TracedTensor, idx, value):
     v = value.jax() if isinstance(value, TracedTensor) else value
     arr = jnp.asarray(t.jax())
     return arr.at[idx].set(v)
+
+
+def _is_int_array(v) -> bool:
+    """An integer index ARRAY operand (traced or concrete) — the gather/
+    scatter index form, as opposed to basic ints/slices."""
+    if isinstance(v, TracedTensor):
+        return (v.ndim >= 1
+                and jnp.issubdtype(jnp.dtype(v.ttype.dtype), jnp.integer))
+    if isinstance(v, (bool, np.bool_)) or not hasattr(v, "dtype"):
+        return False
+    return (getattr(v, "ndim", 0) >= 1
+            and jnp.issubdtype(jnp.dtype(v.dtype), jnp.integer))
 
 
 def _encode_index(item) -> Optional[tuple]:
@@ -813,6 +843,110 @@ def cache_read(buf, starts, sizes):
     nid = reg.g.add("dynamic_slice", (bi,) + dyn, out_t,
                     pdims=tuple(range(len(out_t.shape))),
                     static_starts=static, sizes=tuple(int(s) for s in sizes))
+    return reg.handle(nid)
+
+
+def _index_operand(reg: "_Region", ix) -> int:
+    """Graph value for one gather/scatter index operand.
+
+    Traced tensors are already graph values; *numpy* integer arrays become
+    ``const`` nodes (static index patterns like ``np.arange(slots)`` must
+    not become region inputs — a fresh array id per call would disable the
+    program-replay cache); device arrays become region inputs (rebindable
+    when they are argument leaves)."""
+    if isinstance(ix, TracedTensor):
+        return reg.nid_of(ix)
+    if isinstance(ix, (int, np.integer)):
+        ix = np.asarray(ix, np.int32)
+    if isinstance(ix, np.ndarray):
+        ix = np.ascontiguousarray(ix, dtype=np.int32)
+        return reg.g.add("const", (), TensorType(tuple(ix.shape),
+                                                 str(ix.dtype)), value=ix)
+    return reg.nid_of(ix)
+
+
+def _index_sds(g: TaskGraph, nid: int) -> jax.ShapeDtypeStruct:
+    t = g.nodes[nid].ttype
+    return jax.ShapeDtypeStruct(tuple(t.shape), jnp.dtype(t.dtype))
+
+
+def gather(src, indices):
+    """Integer-array indexing with graph-value indices:
+    ``src[i0, i1, ...]`` over the leading axes.
+
+    Outside a region this is plain jnp advanced indexing.  Inside, it
+    records ONE ``gather`` node whose index operands are graph values
+    (traced router outputs, per-slot positions) — data-dependent reads
+    stay in the region instead of flushing it."""
+    indices = tuple(indices) if isinstance(indices, (tuple, list)) \
+        else (indices,)
+    reg = _active_region()
+    if reg is None:
+        return jnp.asarray(src)[tuple(jnp.asarray(i) for i in indices)]
+    si = reg.nid_of(src)
+    s_t = reg.g.nodes[si].ttype
+    idx_nids = tuple(_index_operand(reg, i) for i in indices)
+    out = jax.eval_shape(
+        lambda s, *ix: s[ix],
+        jax.ShapeDtypeStruct(tuple(s_t.shape), jnp.dtype(s_t.dtype)),
+        *[_index_sds(reg.g, n) for n in idx_nids])
+    out_t = TensorType(tuple(out.shape), str(out.dtype))
+    nid = reg.g.add("gather", (si,) + idx_nids, out_t,
+                    pdims=tuple(range(len(out_t.shape))),
+                    n_idx=len(idx_nids))
+    return reg.handle(nid)
+
+
+def scatter(buf, indices, upd, mode: str = "set", donate: bool = True):
+    """Write ``upd`` into ``buf`` at integer-array indices over the leading
+    axes: ``buf.at[i0, i1, ...].set/add(upd, mode="drop")``.
+
+    Same aliasing discipline as ``cache_write``: inside a region the
+    ``scatter`` node's index operands are graph values, the node is never
+    CSE'd, and with ``donate=True`` a region-input buffer is donated
+    (per-slot KV-cache writes update in place) and the write orders after
+    every read of the pre-write buffer (anti edges; a non-donating
+    scatter is pure dataflow).  Out-of-bounds indices drop the update (jnp
+    scatter semantics — a retired slot whose position ran past capacity
+    writes nothing)."""
+    indices = tuple(indices) if isinstance(indices, (tuple, list)) \
+        else (indices,)
+    reg = _active_region()
+    if reg is None:
+        b = jnp.asarray(buf)
+        u = jnp.asarray(upd).astype(b.dtype)
+        at = b.at[tuple(jnp.asarray(i) for i in indices)]
+        return at.add(u, mode="drop") if mode == "add" \
+            else at.set(u, mode="drop")
+    bi = reg.nid_of(buf)
+    b_t = reg.g.nodes[bi].ttype
+    idx_nids = tuple(_index_operand(reg, i) for i in indices)
+    ui = reg.nid_of(upd)
+    nid = reg.g.add("scatter", (bi,) + idx_nids + (ui,), b_t,
+                    pdims=tuple(range(len(b_t.shape))),
+                    donates=bi if donate else None,
+                    n_idx=len(idx_nids), mode=mode)
+    return reg.handle(nid)
+
+
+def scatter_new(shape, dtype, indices, upd, mode: str = "add"):
+    """Scatter into a FRESH zeros buffer of ``shape``/``dtype`` (the MoE
+    dispatch form: tokens scattered into ``[E, cap, d]``).  The zeros are
+    synthesized inside the node (``zero_init``) — materializing them in
+    model code would create a fresh region input every call and disable
+    the program-replay cache."""
+    indices = tuple(indices) if isinstance(indices, (tuple, list)) \
+        else (indices,)
+    dt = str(jnp.dtype(dtype))
+    reg = _active_region()
+    if reg is None:
+        return scatter(jnp.zeros(tuple(shape), dt), indices, upd, mode=mode)
+    idx_nids = tuple(_index_operand(reg, i) for i in indices)
+    ui = reg.nid_of(upd)
+    out_t = TensorType(tuple(int(s) for s in shape), dt)
+    nid = reg.g.add("scatter", idx_nids + (ui,), out_t,
+                    pdims=tuple(range(len(out_t.shape))),
+                    n_idx=len(idx_nids), mode=mode, zero_init=True)
     return reg.handle(nid)
 
 

@@ -165,6 +165,12 @@ class BaseModel:
         return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
     # -- serving ----------------------------------------------------------
+    def supports_slots(self) -> bool:
+        """True when the family implements the slot-paged serving API
+        (``init_slot_cache`` / ``prefill_into_slot`` / ``decode_step_slots``)
+        — the continuous-batching path of ``ServingEngine``."""
+        return False
+
     def cache_len(self, seq_len: int, kind: str) -> int:
         """KV-cache capacity needed to serve ``seq_len`` tokens (vlm adds
         its image-token prefix)."""

@@ -83,6 +83,44 @@ def rope_table(positions, head_dim: int, base: float = 10000.0,
     return jnp.cos(ang), jnp.sin(ang)
 
 
+def bucket_pow2(n: int, lo: int = 8) -> int:
+    """Round ``n`` up to the next power of two (floor ``lo``) — the shape
+    bucketing used by serving: region programs key on leaf shapes, so
+    bucketed lengths replay from the program cache instead of re-tracing
+    at every length."""
+    m = lo
+    while m < n:
+        m *= 2
+    return m
+
+
+#: bucketed full RoPE tables, keyed by (bucket_len, head_dim, base,
+#: fraction).  The arrays are cached so their *identities* are stable
+#: across decode steps — a region that takes the table as an input binds
+#: the same leaves every call and replays from the program cache.
+_FULL_ROPE: dict = {}
+
+
+def full_rope_table(max_len: int, head_dim: int, base: float = 10000.0,
+                    fraction: float = 1.0):
+    """cos/sin for ALL positions ``[0, bucket_pow2(max_len))``.
+
+    Serving gathers per-slot rows from this table (``tapir.gather`` with
+    the traced position vector) instead of recomputing cos/sin per step.
+    The table length is rounded up to a power-of-two bucket: its shape —
+    part of the region program-cache key — only changes when capacity
+    crosses a bucket boundary, so a decode step whose ``pos`` (or
+    configured ``max_len``) grows replays instead of re-tracing."""
+    Lb = bucket_pow2(int(max_len))
+    key = (Lb, int(head_dim), float(base), float(fraction))
+    tab = _FULL_ROPE.get(key)
+    if tab is None:
+        cos, sin = rope_table(jnp.arange(Lb), head_dim, base, fraction)
+        tab = (cos, sin)
+        _FULL_ROPE[key] = tab
+    return tab
+
+
 def apply_rope(x, cos, sin, fraction: float = 1.0):
     """x: [B,S,H,D].  chatglm-style '2d/half' rope passes fraction=0.5:
     only the first half of head dims rotates, the rest pass through."""

@@ -36,6 +36,45 @@ def _moe_block_specs(cfg: ModelConfig, n_layers: int) -> dict:
     return spec
 
 
+def _route_topk(xt, router, *, k: int, e: int, cap: int):
+    """Top-k routing: (renormalized gates, expert ids, capacity positions,
+    keep mask).  ONE pure-jnp composite shared by the per-op path (called
+    eagerly) and the region path (captured as a ``pyfunc`` via
+    ``tapir.lift``) — the router's data-dependent control stays a graph
+    value feeding the gather/scatter dispatch nodes."""
+    T = xt.shape[0]
+    logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                           # [T, K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    # capacity assignment: position of each (token, k) within its expert
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)              # [T, K, E]
+    flat = onehot.reshape(T * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                          # pre-count
+    pos = jnp.sum(pos * flat, axis=-1).reshape(T, k)               # [T, K]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, cap - 1)
+    return gate, eidx, pos, keep
+
+
+def _dispatch_src(xt, keep, *, k: int, cdt: str):
+    """Token rows replicated per routed copy, zeroed where dropped —
+    the scatter-add update buffer [T*K, d]."""
+    T, d = xt.shape
+    src = jnp.where(keep[..., None],
+                    jnp.broadcast_to(xt[:, None], (T, k, d)), 0)
+    return src.reshape(T * k, d).astype(cdt)
+
+
+def _combine_expert_out(fetched, keep, gate, *, k: int, cdt: str):
+    """Weighted sum of the gathered expert outputs over the k routes."""
+    T = keep.shape[0]
+    d = fetched.shape[-1]
+    f = fetched.reshape(T, k, d)
+    f = jnp.where(keep[..., None], f, 0)
+    return jnp.sum(f * gate[..., None].astype(cdt), axis=1)
+
+
 @register_family("moe")
 class MoELM(DenseLM):
 
@@ -66,6 +105,12 @@ class MoELM(DenseLM):
         restores the 1/dp factor, and replaces the scatter/gather
         collective storm with one [T_local, d] all-reduce per layer.
         """
+        if tapir.is_traced(x):
+            # open region: the whole dispatch (top-k routing, token
+            # scatter, expert GEMMs, gather-back, combine) captures as
+            # graph nodes — regions drop sharding constraints anyway, so
+            # the EP shard_map path is never taken from inside a region
+            return self._moe_ffn_traced(p, x)
         mesh = None
         try:
             mesh = jax.sharding.get_abstract_mesh()
@@ -154,49 +199,67 @@ class MoELM(DenseLM):
         return f(x, p["router"].astype(x.dtype), p["ewg"].astype(x.dtype),
                  p["ewu"].astype(x.dtype), p["ewd"].astype(x.dtype))
 
+    def _moe_cap(self, T: int, S: int, dropless: bool) -> int:
+        cfg = self.cfg
+        cap = max(1, int(math.ceil(T * cfg.top_k / cfg.n_experts
+                                   * cfg.capacity_factor)))
+        cap = min(cap, T)
+        if S == 1 or dropless:
+            # decode (and slot-serving prefill): dropless — capacity
+            # limits are a training construct; dropping tokens would
+            # corrupt generation
+            cap = T
+        return cap
+
     def _moe_ffn_global(self, p, x):
         cfg = self.cfg
         B, S, d = x.shape
         T = B * S
         E, K = cfg.n_experts, cfg.top_k
-        cap = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
-        cap = min(cap, T)
-        if S == 1:
-            # decode: dropless (capacity limits are a training construct;
-            # dropping tokens at T=batch would corrupt generation)
-            cap = T
+        cap = self._moe_cap(T, S, dropless=False)
 
         xt = x.reshape(T, d)
-        logits = (xt.astype(jnp.float32) @
-                  p["router"].astype(jnp.float32))           # [T, E]
-        probs = jax.nn.softmax(logits, axis=-1)
-        gate, eidx = jax.lax.top_k(probs, K)                  # [T, K]
-        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
-
-        # capacity assignment: position of each (token, k) within its expert
-        onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)     # [T, K, E]
-        flat = onehot.reshape(T * K, E)
-        pos = jnp.cumsum(flat, axis=0) - flat                 # pre-count
-        pos = jnp.sum(pos * flat, axis=-1).reshape(T, K)      # [T, K]
-        keep = pos < cap
-        pos = jnp.where(keep, pos, cap - 1)
-
+        gate, eidx, pos, keep = _route_topk(xt, p["router"], k=K, e=E,
+                                            cap=cap)
         # dispatch (scatter tokens into [E, cap, d])
         cdt = x.dtype
         xe = jnp.zeros((E, cap, d), cdt)
-        src = jnp.where(keep[..., None],
-                        jnp.broadcast_to(xt[:, None], (T, K, d)), 0)
-        xe = xe.at[eidx.reshape(-1), pos.reshape(-1)].add(
-            src.reshape(T * K, d).astype(cdt), mode="drop")
+        src = _dispatch_src(xt, keep, k=K, cdt=str(cdt))
+        xe = xe.at[eidx.reshape(-1), pos.reshape(-1)].add(src, mode="drop")
         xe = shard_act(xe, "expert", None, None)
 
         ye = tapir.expert_mlp(xe, p["ewg"], p["ewu"], p["ewd"], cfg.act)
         ye = shard_act(ye, "expert", None, None)
 
         # combine (gather back + weighted sum over k)
-        fetched = ye[eidx.reshape(-1), pos.reshape(-1)].reshape(T, K, d)
-        fetched = jnp.where(keep[..., None], fetched, 0)
-        out = jnp.sum(fetched * gate[..., None].astype(cdt), axis=1)
+        fetched = ye[eidx.reshape(-1), pos.reshape(-1)]
+        out = _combine_expert_out(fetched, keep, gate, k=K, cdt=str(cdt))
+        return out.reshape(B, S, d)
+
+    def _moe_ffn_traced(self, p, x, dropless: bool = False):
+        """Region capture of the FULL dispatch — the piece that used to
+        flush back to per-op execution.  The router runs as one lifted
+        composite whose outputs (gate/eidx/pos/keep) are graph values; the
+        token dispatch is a zero-init ``scatter`` node and the combine a
+        ``gather`` node indexed BY those values — so a MoE decode step is
+        ONE region program, router included."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        T = B * S
+        E, K = cfg.n_experts, cfg.top_k
+        cap = self._moe_cap(T, S, dropless)
+        cdt = str(x.dtype)
+
+        xt = x.reshape(T, d)
+        gate, eidx, pos, keep = tapir.lift(_route_topk, xt, p["router"],
+                                           k=K, e=E, cap=cap)
+        src = tapir.lift(_dispatch_src, xt, keep, k=K, cdt=cdt)
+        ef, pf = eidx.reshape(T * K), pos.reshape(T * K)
+        xe = tapir.scatter_new((E, cap, d), cdt, (ef, pf), src, mode="add")
+        ye = tapir.expert_mlp(xe, p["ewg"], p["ewu"], p["ewd"], cfg.act)
+        fetched = tapir.gather(ye, (ef, pf))
+        out = tapir.lift(_combine_expert_out, fetched, keep, gate,
+                         k=K, cdt=cdt)
         return out.reshape(B, S, d)
 
     # -- forward ----------------------------------------------------------
@@ -250,7 +313,20 @@ class MoELM(DenseLM):
         a = ("layers", "batch", "kvseq", "kv", None)
         return {"k_dense": a, "v_dense": a, "k_moe": a, "v_moe": a, "pos": ()}
 
+    def _cached_moe_block_body(self, p, x, cos, sin, ck, cv, pos0,
+                               is_prefill: bool):
+        """One MoE block against its KV-cache slab — attention, cache
+        writes AND the routed expert FFN (top-k + scatter dispatch via
+        gather/scatter nodes) in ONE region: the last per-op island in a
+        decode step is gone."""
+        x, ck, cv = self._cached_attn_body(p, x, cos, sin, ck, cv, pos0,
+                                           is_prefill)
+        x = x + self._moe_ffn(p, self._norm(x, p["ln2"]))
+        return x, ck, cv
+
     def _run_with_cache(self, params, tokens, cache, positions, is_prefill):
+        from repro.core.passes import mesh_has_model_axis
+
         from . import layers as L
         cfg = self.cfg
         cdt = jnp.dtype(cfg.compute_dtype)
@@ -261,17 +337,24 @@ class MoELM(DenseLM):
 
         dense_blk = tapir.parallel_region(self._cached_block_body,
                                           name="moe_dense_cached_block")
+        moe_blk = tapir.parallel_region(self._cached_moe_block_body,
+                                        name="moe_cached_block")
         attn_blk = tapir.parallel_region(self._cached_attn_body,
                                          name="moe_cached_attn")
+        # under a model-axis mesh the expert FFN keeps its EP shard_map
+        # dispatch (per-op, outside the region); otherwise the router +
+        # dispatch capture INTO the block's region via gather/scatter
+        one_region = not mesh_has_model_axis()
 
         def body_factory(is_moe):
             def body(carry, xs):
                 x = carry
                 p, ck, cv = xs
                 p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-                if is_moe:
-                    # attention + cache writes region-capture; the routed
-                    # expert FFN stays per-op (data-dependent scatter)
+                if is_moe and one_region:
+                    x, ck, cv = moe_blk(p, x, cos, sin, ck, cv, pos0,
+                                        is_prefill)
+                elif is_moe:
                     x, ck, cv = attn_blk(p, x, cos, sin, ck, cv, pos0,
                                          is_prefill)
                     x = x + self._moe_ffn(p, self._norm(x, p["ln2"]))
@@ -298,3 +381,42 @@ class MoELM(DenseLM):
         if is_prefill:
             h = h[:, -1:]
         return self._head(params, h), new_cache
+
+    # -- slot-paged serving ----------------------------------------------
+    def _slot_layer_params(self, params, cdt) -> list:
+        cfg = self.cfg
+        blocks = params["blocks"]
+        layers = []
+        if "dense" in blocks:
+            for i in range(cfg.first_dense_layers):
+                layers.append(("dense", {k: v[i].astype(cdt)
+                                         for k, v in blocks["dense"].items()}))
+        for i in range(cfg.n_layers - cfg.first_dense_layers):
+            layers.append(("moe", {k: v[i].astype(cdt)
+                                   for k, v in blocks["moe"].items()}))
+        return layers
+
+    def _slot_moe_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
+        """MoE decode block over the slot page: attention, per-slot cache
+        scatter AND the routed expert FFN in ONE region."""
+        x, ck, cv = self._slot_attn_body(p, x, rope_cos, rope_sin, ck, cv,
+                                         pos)
+        x = x + self._moe_ffn_traced(p, self._norm(x, p["ln2"]))
+        return x, ck, cv
+
+    def _slot_prefill_moe_block_body(self, p, x, cos, sin, ck, cv, slot):
+        # dropless: serving prefill pads prompts to a bucket; capacity
+        # drops there would let padding evict real tokens
+        x, ck, cv = self._slot_prefill_attn_body(p, x, cos, sin, ck, cv,
+                                                 slot)
+        x = x + self._moe_ffn_traced(p, self._norm(x, p["ln2"]),
+                                     dropless=True)
+        return x, ck, cv
+
+    def _slot_bodies(self) -> dict:
+        return {"dense": self._slot_block_body,
+                "moe": self._slot_moe_block_body}
+
+    def _slot_prefill_bodies(self) -> dict:
+        return {"dense": self._slot_prefill_block_body,
+                "moe": self._slot_prefill_moe_block_body}

@@ -240,6 +240,171 @@ class DenseLM(BaseModel):
                                              positions, is_prefill=False)
         return logits[:, -1], cache
 
+    # -- slot-paged serving (continuous batching) -----------------------
+    #
+    # The cache is a fixed [slots, max_len] page per layer plus a PER-SLOT
+    # position vector: occupancy is data, not shape.  A decode step runs
+    # every slot — each block is ONE region program (per-slot RoPE rows
+    # gathered from the bucketed table, per-slot K/V scattered at
+    # (slot, pos[slot]), per-slot masked attention) replayed from
+    # ``_PROGRAMS`` regardless of which slots hold live requests.  New
+    # requests enter a free slot MID-DECODE via ``prefill_into_slot``
+    # (a dynamic-slot-start cache write), and finished slots free
+    # immediately — no wave barrier anywhere.
+
+    def supports_slots(self) -> bool:
+        return True
+
+    def init_slot_cache(self, slots: int, max_len: int) -> dict:
+        """Per-layer K/V pages [slots, max_len, Hkv, hd] (python list — a
+        layer's page donates independently, no stack/unstack copies) plus
+        the per-slot length vector."""
+        cfg = self.cfg
+        kv = jnp.dtype(cfg.compute_dtype)
+        shape = (slots, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": [jnp.zeros(shape, kv) for _ in range(cfg.n_layers)],
+                "v": [jnp.zeros(shape, kv) for _ in range(cfg.n_layers)],
+                "pos": jnp.zeros((slots,), jnp.int32)}
+
+    def slot_params(self, params) -> dict:
+        """Per-layer param dicts + head params with STABLE array ids:
+        slicing/casting is hoisted out of the decode loop so every region
+        input rebinds to the same leaves and the program cache replays."""
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        head = {"ln_f": params["ln_f"], "w": jnp.asarray(w).astype(cdt)}
+        return {"layers": self._slot_layer_params(params, cdt),
+                "head": head, "embed": params["embed"]}
+
+    def _slot_layer_params(self, params, cdt) -> list:
+        return [("dense",
+                 {k: v[i].astype(cdt) for k, v in params["blocks"].items()})
+                for i in range(self.cfg.n_layers)]
+
+    def _rope_frac(self) -> float:
+        return 0.5 if self.cfg.rope == "half" else 1.0
+
+    def _slot_attn_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
+        """Attention sub-block over the slot page.  All data-dependent
+        pieces are graph values: RoPE rows gather at ``pos``, K/V scatter
+        at (slot, pos[slot]), and the decode mask reads ``pos + 1``."""
+        cfg = self.cfg
+        B = x.shape[0]
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        xn = self._norm(x, p["ln1"])
+        bs = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+        q, k, v = tapir.multi_linear(xn, [p["wq"], p["wk"], p["wv"]], bs)
+        q = q.reshape(B, 1, H, hd)
+        k = k.reshape(B, 1, Hkv, hd)
+        v = v.reshape(B, 1, Hkv, hd)
+        rot2 = rope_cos.shape[-1]
+        cos = tapir.gather(rope_cos, (pos,)).reshape(B, 1, rot2)
+        sin = tapir.gather(rope_sin, (pos,)).reshape(B, 1, rot2)
+        frac = self._rope_frac()
+        q = L.apply_rope(q, cos, sin, frac)
+        k = L.apply_rope(k, cos, sin, frac)
+        slots_iota = np.arange(B)
+        ck = tapir.scatter(ck, (slots_iota, pos), k.reshape(B, Hkv, hd))
+        cv = tapir.scatter(cv, (slots_iota, pos), v.reshape(B, Hkv, hd))
+        o = _decode_attention(q, ck, cv, pos + 1)
+        x = x + tapir.linear(o.reshape(B, 1, H * hd), p["wo"])
+        return x, ck, cv
+
+    def _slot_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
+        x, ck, cv = self._slot_attn_body(p, x, rope_cos, rope_sin, ck, cv,
+                                         pos)
+        x = x + self._mlp(p, self._norm(x, p["ln2"]))
+        return x, ck, cv
+
+    def _slot_prefill_attn_body(self, p, x, cos, sin, ck, cv, slot):
+        """Prefill one request into slot ``slot`` (a *dynamic* start of the
+        donated cache write): K/V rows land at [slot, 0:S]."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        xn = self._norm(x, p["ln1"])
+        bs = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+        q, k, v = tapir.multi_linear(xn, [p["wq"], p["wk"], p["wv"]], bs)
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        frac = self._rope_frac()
+        q = L.apply_rope(q, cos, sin, frac)
+        k = L.apply_rope(k, cos, sin, frac)
+        ck = tapir.cache_write(ck, k, (slot, 0, 0, 0))
+        cv = tapir.cache_write(cv, v, (slot, 0, 0, 0))
+        o = tapir.attention(q, k, v, causal=True)
+        x = x + tapir.linear(o.reshape(B, S, H * hd), p["wo"])
+        return x, ck, cv
+
+    def _slot_prefill_block_body(self, p, x, cos, sin, ck, cv, slot):
+        x, ck, cv = self._slot_prefill_attn_body(p, x, cos, sin, ck, cv,
+                                                 slot)
+        x = x + self._mlp(p, self._norm(x, p["ln2"]))
+        return x, ck, cv
+
+    def _slot_head_body(self, hp, x):
+        x = self._norm(x, hp["ln_f"])
+        return tapir.linear(x, hp["w"])[:, -1]
+
+    def _slot_bodies(self) -> dict:
+        return {"dense": self._slot_block_body}
+
+    def _slot_prefill_bodies(self) -> dict:
+        return {"dense": self._slot_prefill_block_body}
+
+    def decode_step_slots(self, sp, tokens, cache):
+        """One decode step for EVERY slot.  tokens: [slots, 1] (free slots
+        carry don't-care tokens).  Returns (logits [slots, vocab], cache);
+        per-slot positions advance by one, cache pages update in place
+        (scatter donation)."""
+        cfg = self.cfg
+        h = self._embed({"embed": sp["embed"]}, tokens)
+        max_len = cache["k"][0].shape[1]
+        cos_t, sin_t = L.full_rope_table(max_len, cfg.hd,
+                                         fraction=self._rope_frac())
+        pos = cache["pos"]
+        bodies = self._slot_bodies()
+        blks = {kind: tapir.parallel_region(fn, name=f"slot_{kind}_block")
+                for kind, fn in bodies.items()}
+        for i, (kind, p) in enumerate(sp["layers"]):
+            h, ck, cv = blks[kind](p, h, cos_t, sin_t,
+                                   cache["k"][i], cache["v"][i], pos)
+            cache["k"][i], cache["v"][i] = ck, cv
+        head = tapir.parallel_region(self._slot_head_body, name="slot_head")
+        logits = head(sp["head"], h)
+        cache["pos"] = pos + 1
+        return logits, cache
+
+    def prefill_into_slot(self, sp, tokens, cache, slot: int, plen: int):
+        """Insert one request into slot ``slot`` mid-decode.  tokens:
+        [1, Sb] right-padded to a power-of-two bucket (positions >= plen
+        hold don't-care tokens: causal attention keeps rows < plen and the
+        plen-1 logits exact, and decode masks the garbage rows via
+        pos[slot] = plen).  Returns (logits [1, vocab] at plen-1, cache)."""
+        cfg = self.cfg
+        Sb = tokens.shape[1]
+        h = self._embed({"embed": sp["embed"]}, tokens)
+        cos_t, sin_t = L.full_rope_table(
+            max(cache["k"][0].shape[1], Sb), cfg.hd,
+            fraction=self._rope_frac())
+        cos, sin = cos_t[:Sb], sin_t[:Sb]
+        slot_s = jnp.asarray(slot, jnp.int32)
+        bodies = self._slot_prefill_bodies()
+        blks = {kind: tapir.parallel_region(fn, name=f"slot_{kind}_prefill")
+                for kind, fn in bodies.items()}
+        for i, (kind, p) in enumerate(sp["layers"]):
+            h, ck, cv = blks[kind](p, h, cos, sin,
+                                   cache["k"][i], cache["v"][i], slot_s)
+            cache["k"][i], cache["v"][i] = ck, cv
+        hrow = jax.lax.dynamic_slice_in_dim(h, plen - 1, 1, axis=1)
+        head = tapir.parallel_region(self._slot_head_body, name="slot_head")
+        logits = head(sp["head"], hrow)
+        cache["pos"] = cache["pos"].at[slot].set(plen)
+        return logits, cache
+
 
 def _decode_attention(q, ck, cv, valid_len):
     """Traced-aware wrapper: inside a region the masked cache attention
@@ -255,7 +420,10 @@ def _decode_attention(q, ck, cv, valid_len):
 
 def _masked_decode_attention(q, ck, cv, valid_len):
     """Composite masked attention over a static-length KV cache.
-    q: [B,S,H,hd], ck/cv: [B,maxlen,Hkv,hd]; positions >= valid_len masked."""
+    q: [B,S,H,hd], ck/cv: [B,maxlen,Hkv,hd]; positions >= valid_len masked.
+    ``valid_len`` is a scalar (one shared length) or a [B] vector (the
+    slot-paged cache: every slot has its own length — occupancy is data,
+    not shape)."""
     B, S, H, hd = q.shape
     maxlen, Hkv = ck.shape[1], ck.shape[2]
     grp = H // Hkv
@@ -263,9 +431,12 @@ def _masked_decode_attention(q, ck, cv, valid_len):
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
                    preferred_element_type=jnp.float32) / np.sqrt(hd)
     kpos = jnp.arange(maxlen)
-    qpos = valid_len - S + jnp.arange(S)
-    mask = kpos[None, :] <= qpos[:, None]          # causal within cache
-    s = jnp.where(mask[None, None, None], s, jnp.finfo(jnp.float32).min)
+    vl = jnp.asarray(valid_len)
+    qpos = vl[..., None] - S + jnp.arange(S)       # [S] or [B,S]
+    mask = kpos <= qpos[..., None]                 # causal within cache
+    if mask.ndim == 2:
+        mask = mask[None]                          # shared length -> [1,S,k]
+    s = jnp.where(mask[:, None, None], s, jnp.finfo(jnp.float32).min)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv,
                    preferred_element_type=jnp.float32)

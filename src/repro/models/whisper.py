@@ -4,7 +4,12 @@ Per the assignment, the conv frontend is a STUB: ``input_specs`` provides
 precomputed frame embeddings [B, n_frames, d_model] (what the two conv
 layers would emit).  Encoder: bidirectional attention + GELU MLP with
 learned positions.  Decoder: causal self-attention + cross-attention to the
-encoder output; cross K/V are computed once at prefill and cached."""
+encoder output; cross K/V are computed once at prefill and cached.
+
+The decoder's KV-cache writes go through ``tapir.cache_write`` and each
+decode block runs as ONE stateful region (donated in-place cache updates),
+like the dense family — no raw ``lax.dynamic_update_slice`` per-op
+islands."""
 from __future__ import annotations
 
 import jax
@@ -15,7 +20,7 @@ from repro.dist import shard_act
 
 from . import layers as L
 from .base import BaseModel, ModelConfig, ParamSpec, register_family
-from .transformer import _masked_decode_attention
+from .transformer import _decode_attention
 
 
 def _attn_specs(cfg: ModelConfig, n_layers: int, prefix: str) -> dict:
@@ -91,14 +96,15 @@ class WhisperED(BaseModel):
         v = v.reshape(B, Skv, H, hd)
         if kv_cache is not None:
             ck, cv, cpos, is_prefill = kv_cache
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, cpos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, cpos, 0, 0))
+            # stateful capture: inside a region these record donated
+            # dynamic_update_slice nodes (in-place KV writes), like the
+            # dense family; outside they are plain lax.dynamic_update_slice
+            ck = tapir.cache_write(ck, k, (0, cpos, 0, 0))
+            cv = tapir.cache_write(cv, v, (0, cpos, 0, 0))
             if is_prefill:
                 o = tapir.attention(q, k, v, causal=True)
             else:
-                o = _masked_decode_attention(q, ck, cv, cpos + S)
+                o = _decode_attention(q, ck, cv, cpos + S)
             o = o.reshape(B, S, H * hd)
             return x + tapir.linear(o, p[f"{prefix}wo"]), (ck, cv)
         o = tapir.attention(q, k, v, causal=causal)
@@ -167,11 +173,35 @@ class WhisperED(BaseModel):
         a = ("layers", "batch", "kvseq", "kv", None)
         return {"k": a, "v": a, "ck": a, "cv": a, "pos": ()}
 
+    def _cached_dec_block_body(self, p, x, enc_out, ck, cv, cck, ccv, pos0,
+                               is_prefill: bool):
+        """One decoder block against its cache slabs.  Under region
+        capture (``tapir.parallel_region`` below, like the dense family)
+        the whole step — self-attention with its donated KV-cache writes,
+        cross-attention against the cached encoder K/V (computed + stored
+        once at prefill), and the MLP — traces into ONE TaskGraph and
+        replays as a single cached jit per step."""
+        cfg = self.cfg
+        B, S = x.shape[0], x.shape[1]
+        H, hd = cfg.n_heads, cfg.hd
+        x, (ck, cv) = self._attn(p, "sa_", x, None, causal=True,
+                                 kv_cache=(ck, cv, pos0, is_prefill))
+        if is_prefill:   # compute + store cross K/V once
+            cck = tapir.linear(enc_out, p["ca_wk"]
+                               ).reshape(B, -1, H, hd).astype(cck.dtype)
+            ccv = tapir.linear(enc_out, p["ca_wv"], p["ca_bv"]
+                               ).reshape(B, -1, H, hd).astype(ccv.dtype)
+        qn = L.layernorm(x, p["ca_ln"])
+        q = tapir.linear(qn, p["ca_wq"], p["ca_bq"]).reshape(B, S, H, hd)
+        o = tapir.attention(q, cck, ccv, causal=False)
+        x = x + tapir.linear(o.reshape(B, S, H * hd), p["ca_wo"])
+        x = self._mlp(p, x)
+        return x, ck, cv, cck, ccv
+
     def _run_with_cache(self, params, tokens, cache, frames, is_prefill):
         cfg = self.cfg
         cdt = jnp.dtype(cfg.compute_dtype)
         B, S = tokens.shape
-        H, hd = cfg.n_heads, cfg.hd
         pos0 = cache["pos"]
         posemb = jax.lax.dynamic_slice_in_dim(
             params["dec_pos"], pos0, S, 0) if not is_prefill \
@@ -179,25 +209,16 @@ class WhisperED(BaseModel):
         h = jnp.take(params["embed"], tokens, axis=0).astype(cdt) \
             + posemb.astype(cdt)[None]
 
-        if is_prefill:
-            enc_out = self.encode(params, frames)
+        enc_out = self.encode(params, frames) if is_prefill else None
+        blk = tapir.parallel_region(self._cached_dec_block_body,
+                                    name="whisper_cached_block")
 
         def body(carry, xs):
             x = carry
             p, ck, cv, cck, ccv = xs
             p = jax.tree_util.tree_map(lambda a: a.astype(cdt), p)
-            x, (ck, cv) = self._attn(p, "sa_", x, None, causal=True,
-                                     kv_cache=(ck, cv, pos0, is_prefill))
-            if is_prefill:   # compute + store cross K/V once
-                cck = tapir.linear(enc_out, p["ca_wk"]
-                                   ).reshape(B, -1, H, hd).astype(cck.dtype)
-                ccv = tapir.linear(enc_out, p["ca_wv"], p["ca_bv"]
-                                   ).reshape(B, -1, H, hd).astype(ccv.dtype)
-            qn = L.layernorm(x, p["ca_ln"])
-            q = tapir.linear(qn, p["ca_wq"], p["ca_bq"]).reshape(B, S, H, hd)
-            o = tapir.attention(q, cck, ccv, causal=False)
-            x = x + tapir.linear(o.reshape(B, S, H * hd), p["ca_wo"])
-            x = self._mlp(p, x)
+            x, ck, cv, cck, ccv = blk(p, x, enc_out, ck, cv, cck, ccv,
+                                      pos0, is_prefill)
             return x, (ck, cv, cck, ccv)
 
         h, (ck, cv, cck, ccv) = jax.lax.scan(

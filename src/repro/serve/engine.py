@@ -1,25 +1,37 @@
-"""Serving: prefill + decode steps under pjit, with a batched engine.
+"""Serving: slot-paged KV cache with mid-wave continuous batching.
 
-Decode-shape cells (``decode_32k``, ``long_500k``) lower ``decode_step``:
-one new token against a KV cache (or SSM state) of ``seq_len``.  The KV
-cache's *sequence* dim is sharded over the ``model`` axis ("kvseq" logical
-axis) — masked decode attention then compiles to a flash-decode-style
-partial-softmax with a small cross-shard reduction, and per-device cache
-bytes shrink by the TP degree.  Batch shards over (pod, data).
+``ServingEngine`` schedules requests over a fixed pool of ``slots`` — one
+row of a paged per-layer KV cache ``[slots, max_len]`` plus a per-slot
+length vector (``cache["pos"]``).  Occupancy is DATA, not shape:
 
-``ServingEngine`` is the host-side loop: continuous batching over a request
-queue, greedy sampling, per-request stop handling.
+* **admit** — a new request enters any free slot *mid-decode* via
+  ``model.prefill_into_slot``: its prompt (right-padded to a power-of-two
+  bucket) prefills in one shot and the K/V rows land at ``[slot, 0:plen]``
+  through a dynamic-slot-start donated cache write.
+* **decode** — every step runs ALL slots through
+  ``model.decode_step_slots``: each block is ONE region program (per-slot
+  RoPE rows gathered from the bucketed table, per-slot K/V scattered at
+  ``(slot, pos[slot])`` via ``gather``/``scatter`` IR nodes, per-slot
+  masked attention) replayed from the ``_PROGRAMS`` cache with one dict
+  probe + one jit call, REGARDLESS of which slots are live.  Cache pages
+  update in place (scatter donation) — zero per-step copies.
+* **free** — a finished request releases its slot immediately; the next
+  queued request takes it on the same scheduler tick.  No wave barrier:
+  a straggler never blocks the rest of the batch.
 
-With ``ServeConfig.regions=True`` (default) prefill and decode run through
-*stateful region capture*: each block of ``model.decode_step`` — including
-the KV-cache ``dynamic_update_slice`` writes — traces into one TaskGraph,
-compiles once, and executes as a single jit.  The region jit marks its
-cache inputs donated; that donation takes effect when regions execute at
-top level (library-call usage, the ``decode_region_vs_per_op`` benchmark
-regime).  Under ``make_decode_step``'s outer ``jax.jit`` the inner
-donation is inlined away and the in-place cache update comes from the
-OUTER jit's ``donate_argnums=(2,)`` instead — either way decode never
-copies the cache per step.  ``regions=False`` is the per-op control.
+``run_wave`` is the A/B baseline: the SAME slot primitives, but requests
+admit in full batches and the batch decodes until its slowest member
+finishes (the old wave semantics) — ``benchmarks/kernel_bench.py
+serve_continuous_vs_wave`` measures the utilization gap on mixed-length
+requests, with bitwise-identical per-request outputs (per-slot compute
+never mixes rows across slots).
+
+The pjit path (``make_prefill_step`` / ``make_decode_step``) is unchanged:
+on a mesh, decode lowers with the KV cache's sequence dim sharded over the
+``model`` axis ("kvseq") and the engine falls back to padded-wave
+scheduling — slot scheduling composes with meshes once region nodes carry
+sharding attrs (see ROADMAP).  ``ServeConfig.regions=False`` is the
+per-op control: the same slot loop with every op dispatched eagerly.
 """
 from __future__ import annotations
 
@@ -116,13 +128,23 @@ class Request:
 
 
 class ServingEngine:
-    """Host-side batched serving loop (continuous batching, greedy)."""
+    """Host-side serving loop: a slot allocator over a paged KV cache
+    (continuous batching, greedy sampling) — see the module docstring."""
 
     def __init__(self, model, params, mesh=None, batch: int = 8,
                  max_len: int = 2048, cfg: ServeConfig = ServeConfig()):
         self.model, self.params = model, params
         self.batch, self.max_len = batch, max_len
+        self.slots = batch
         self.cfg = cfg
+        self._sp = None            # lazy pre-sliced slot params
+        # slot scheduling needs the slot-indexed decode path and runs the
+        # unjitted region-replay regime; on a mesh (or for families
+        # without slot support: SSM/hybrid/encdec) fall back to the
+        # pjit'd padded-wave loop
+        self._slot_capable = (mesh is None
+                              and getattr(model, "supports_slots",
+                                          lambda: False)())
         if mesh is not None:
             self._prefill = make_prefill_step(model, mesh, cfg)[0]
             self._decode = make_decode_step(model, mesh, cfg)[0]
@@ -144,9 +166,108 @@ class ServingEngine:
             self._prefill = jax.jit(_pf, donate_argnums=(2,))
             self._decode = jax.jit(_dc, donate_argnums=(2,))
 
-    def run(self, requests: list[Request], max_steps: int = 256) -> list[Request]:
-        """Simple continuous batching: group requests into one padded batch
-        per wave (prompts right-aligned), decode until everyone is done."""
+    # -- scheduling -------------------------------------------------------
+    def run(self, requests: list[Request],
+            max_steps: int = 256) -> list[Request]:
+        """Continuous batching: requests admit into free slots mid-decode,
+        finished slots free immediately.  ``max_steps`` caps each
+        request's decode-step budget (a request that exhausts it frees
+        its slot with ``done=False``), matching the wave loop's per-wave
+        cap."""
+        if not self._slot_capable:
+            return self._run_padded_waves(requests, max_steps)
+        return self._run_slots(requests, max_steps, continuous=True)
+
+    def run_wave(self, requests: list[Request],
+                 max_steps: int = 256) -> list[Request]:
+        """A/B baseline: the same slot primitives with WAVE scheduling —
+        admit a full batch, decode until every member finishes, repeat.
+        Slots that finish early idle until the wave's slowest request
+        drains (the utilization gap the continuous scheduler removes)."""
+        if not self._slot_capable:
+            return self._run_padded_waves(requests, max_steps)
+        return self._run_slots(requests, max_steps, continuous=False)
+
+    def _run_slots(self, requests, max_steps: int, continuous: bool):
+        from repro.models.layers import bucket_pow2
+        model = self.model
+        if self._sp is None:
+            self._sp = model.slot_params(self.params)
+        sp = self._sp
+        slot_req: list[Optional[Request]] = [None] * self.slots
+        # per-slot decode-step counter: ``max_steps`` caps each REQUEST's
+        # decode budget (the wave loop's per-wave semantics), not the
+        # whole call — a long queue must not starve late admits
+        slot_steps = [0] * self.slots
+        tokens = np.zeros((self.slots, 1), np.int32)
+        qi = 0
+        with use(self.cfg.tapir_config()):
+            cache = model.init_slot_cache(self.slots, self.max_len)
+            while qi < len(requests) or any(r is not None for r in slot_req):
+                # -- admission: continuous fills ANY free slot on every
+                # tick; wave only refills once the whole pool drained
+                if continuous or all(r is None for r in slot_req):
+                    for s in range(self.slots):
+                        if qi >= len(requests):
+                            break
+                        if slot_req[s] is not None:
+                            continue
+                        r = requests[qi]
+                        qi += 1
+                        plen = len(r.prompt)
+                        # the slot page must hold every position a decode
+                        # step will write: rows [0, plen + max_new - 1).
+                        # Past capacity the scatter would DROP new K/V
+                        # rows while sampling continued — corrupt output,
+                        # so reject at admission instead.
+                        if plen + r.max_new - 1 > self.max_len:
+                            raise ValueError(
+                                f"request {r.rid}: prompt ({plen}) + "
+                                f"max_new ({r.max_new}) overflows the "
+                                f"slot page (max_len={self.max_len})")
+                        padded = np.zeros(
+                            (1, min(bucket_pow2(plen), self.max_len)),
+                            np.int32)
+                        padded[0, :plen] = np.asarray(r.prompt)
+                        logits, cache = model.prefill_into_slot(
+                            sp, jnp.asarray(padded), cache, s, plen)
+                        tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+                        r.out.append(tok)
+                        if len(r.out) >= r.max_new:
+                            r.done = True
+                            cache["pos"] = cache["pos"].at[s].set(0)
+                        else:
+                            slot_req[s] = r
+                            slot_steps[s] = 0
+                            tokens[s, 0] = tok
+                if not any(r is not None for r in slot_req):
+                    continue    # everyone finished at prefill; admit more
+                # -- one decode step for the WHOLE pool (free slots carry
+                # don't-care tokens; their writes drop / get overwritten)
+                logits, cache = model.decode_step_slots(
+                    sp, jnp.asarray(tokens), cache)
+                nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+                for s, r in enumerate(slot_req):
+                    if r is None:
+                        continue
+                    tok = int(nxt[s])
+                    r.out.append(tok)
+                    tokens[s, 0] = tok
+                    slot_steps[s] += 1
+                    if len(r.out) >= r.max_new:
+                        r.done = True
+                    if r.done or slot_steps[s] >= max_steps:
+                        slot_req[s] = None     # out of budget: free, not done
+                        cache["pos"] = cache["pos"].at[s].set(0)
+        return requests
+
+    # -- legacy padded-wave loop (mesh path / families without slots) -----
+    def _run_padded_waves(self, requests: list[Request],
+                          max_steps: int = 256) -> list[Request]:
+        """Padded-batch waves over ``model.prefill``/``decode_step``
+        (prompts left-PADDED to one shared length, i.e. right-aligned —
+        pad tokens sit at the sequence start and get attended; the wave
+        blocks until its slowest member finishes)."""
         for wave_start in range(0, len(requests), self.batch):
             wave = requests[wave_start: wave_start + self.batch]
             B = len(wave)

@@ -1,0 +1,425 @@
+"""Continuous batching over the slot-paged KV cache, and the
+gather/scatter IR nodes it is built on.
+
+* IR alias safety — scatter nodes are never CSE'd, order after every read
+  of the pre-write buffer (anti edges), and donate their buffer like
+  ``dynamic_update_slice``;
+* tracing — ``t[idx]`` and ``t.at[idx].set/add`` with integer-ARRAY
+  indices (traced or concrete) record gather/scatter nodes whose index
+  operands are graph values, matching eager jnp numerics;
+* MoE — the routed expert FFN (top-k + scatter dispatch) captures into
+  the decode block's region: gather/scatter nodes present, no mid-region
+  flush, numerics match the per-op path;
+* scheduling — staggered admit/finish through ``ServingEngine.run``
+  equals sequential per-request decode AND wave scheduling bitwise;
+* program cache — ``_PROGRAMS`` hit-rate stays 1 after warmup across
+  occupancy changes (admits, frees, different pos vectors).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import tapir
+from repro.core.ir import TaskGraph, TensorType
+from repro.core.passes.cse import cse
+from repro.core.tapir import TapirConfig, cache_stats, clear_cache, use
+from repro.models.base import get_model
+from repro.serve import Request, ServeConfig, ServingEngine
+
+
+def setup_function(_):
+    clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# IR-level: scatter aliasing discipline
+# ---------------------------------------------------------------------------
+
+
+def _scatter_graph():
+    """buf -> gather (pre-read) -> donated scatter -> gather (post-read)"""
+    g = TaskGraph("scatter_alias")
+    buf_t = TensorType((4, 8), "float32")
+    idx_t = TensorType((4,), "int32")
+    upd_t = TensorType((4,), "float32")
+    buf = g.add_input("buf", buf_t)
+    idx = g.add_input("idx", idx_t)
+    upd = g.add_input("upd", upd_t)
+    r_pre = g.add("gather", (buf, idx), upd_t, pdims=(0,), n_idx=1)
+    w = g.add("scatter", (buf, idx, upd), buf_t, pdims=(0, 1),
+              donates=buf, n_idx=1, mode="set")
+    r_post = g.add("gather", (w, idx), upd_t, pdims=(0,), n_idx=1)
+    g.set_outputs([r_pre, w, r_post])
+    return g, buf, r_pre, w, r_post
+
+
+def test_scatter_orders_after_prior_reads():
+    g, buf, r_pre, w, r_post = _scatter_graph()
+    assert r_pre in g.nodes[w].anti, \
+        "scatter must carry an anti-dep on the pre-write read"
+    order = g.topo_order()
+    assert order.index(r_pre) < order.index(w) < order.index(r_post)
+
+
+def test_scatter_never_cse_and_reads_stay_distinct():
+    g = TaskGraph("scatter_cse")
+    buf_t = TensorType((4, 8), "float32")
+    idx_t = TensorType((4,), "int32")
+    upd_t = TensorType((4,), "float32")
+    buf = g.add_input("buf", buf_t)
+    idx = g.add_input("idx", idx_t)
+    upd = g.add_input("upd", upd_t)
+    w1 = g.add("scatter", (buf, idx, upd), buf_t, pdims=(0, 1),
+               donates=buf, n_idx=1, mode="set")
+    w2 = g.add("scatter", (buf, idx, upd), buf_t, pdims=(0, 1),
+               donates=buf, n_idx=1, mode="set")
+    # non-donating scatters with identical structure must survive too
+    w3 = g.add("scatter", (buf, idx, upd), buf_t, pdims=(0, 1),
+               n_idx=1, mode="add")
+    w4 = g.add("scatter", (buf, idx, upd), buf_t, pdims=(0, 1),
+               n_idx=1, mode="add")
+    r1 = g.add("gather", (w1, idx), upd_t, pdims=(0,), n_idx=1)
+    r2 = g.add("gather", (w2, idx), upd_t, pdims=(0,), n_idx=1)
+    g.set_outputs([r1, r2, w3, w4])
+    cse(g)
+    for w in (w1, w2, w3, w4):
+        assert w in g.nodes, "scatter nodes must never be CSE'd"
+    assert r1 in g.nodes and r2 in g.nodes
+
+
+def test_scatter_donation_in_signature_and_donated_inputs():
+    def build(donate):
+        g = TaskGraph("sig")
+        buf = g.add_input("buf", TensorType((4, 8), "float32"))
+        idx = g.add_input("idx", TensorType((4,), "int32"))
+        upd = g.add_input("upd", TensorType((4,), "float32"))
+        w = g.add("scatter", (buf, idx, upd), TensorType((4, 8), "float32"),
+                  pdims=(0, 1), donates=buf if donate else None,
+                  n_idx=1, mode="set")
+        g.set_outputs([w])
+        return g
+    assert build(True).signature() != build(False).signature()
+    assert build(True).donated_inputs() and not build(False).donated_inputs()
+
+
+# ---------------------------------------------------------------------------
+# tracing: data-dependent indices stay in the region
+# ---------------------------------------------------------------------------
+
+
+def test_traced_scatter_gather_match_eager():
+    buf = jnp.arange(24, dtype=jnp.float32).reshape(4, 6)
+    pos = jnp.asarray([1, 5, 0, 9], jnp.int32)      # one out-of-bounds
+    upd = jnp.full((4,), -1.0)
+
+    @tapir.parallel_region
+    def step(buf, pos, upd):
+        before = tapir.gather(buf, (np.arange(4), pos))
+        b2 = tapir.scatter(buf, (np.arange(4), pos), upd, donate=False)
+        after = tapir.gather(b2, (np.arange(4), pos))
+        return before, b2, after
+
+    ref_b2 = buf.at[np.arange(4), pos].set(upd, mode="drop")
+    with use(TapirConfig(mode="tapir")):
+        before, b2, after = step(buf, pos, upd)
+    np.testing.assert_array_equal(np.asarray(b2), np.asarray(ref_b2))
+    np.testing.assert_array_equal(np.asarray(before),
+                                  np.asarray(buf[np.arange(4), pos]))
+    np.testing.assert_array_equal(np.asarray(after),
+                                  np.asarray(ref_b2[np.arange(4), pos]))
+
+
+def test_traced_getitem_and_at_add_with_array_indices():
+    x = jnp.ones((5, 3))
+    idx = jnp.asarray([0, 4, 2], jnp.int32)
+    v = jnp.full((3, 3), 2.0)
+
+    @tapir.parallel_region
+    def f(x, idx, v):
+        y = x.at[idx].add(v, donate=False)    # scatter-add node
+        return y[idx]                          # gather node
+
+    with use(TapirConfig(mode="tapir")):
+        out = f(x, idx, v)
+    ref = x.at[idx].add(v, mode="drop")[idx]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_traced_scatter_donates_buffer_storage():
+    buf = jnp.zeros((8, 16), jnp.float32)
+    upd = jnp.ones((8,))
+
+    @tapir.parallel_region
+    def wr(c, pos, u):
+        return tapir.scatter(c, (np.arange(8), pos), u)
+
+    with use(TapirConfig(mode="tapir")):
+        p0 = buf.unsafe_buffer_pointer()
+        c1 = wr(buf, jnp.full((8,), 3, jnp.int32), upd)
+        assert c1.unsafe_buffer_pointer() == p0, \
+            "slot cache page must update in place (scatter donation)"
+        c2 = wr(c1, jnp.full((8,), 7, jnp.int32), upd)
+        assert c2.unsafe_buffer_pointer() == p0
+    got = np.asarray(c2)
+    assert got[:, 3].sum() == 8 and got[:, 7].sum() == 8
+
+
+# ---------------------------------------------------------------------------
+# MoE: router + dispatch captured in ONE region
+# ---------------------------------------------------------------------------
+
+
+def _moe_model():
+    cfg = dataclasses.replace(C.get_smoke("moonshot_v1_16b_a3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_moe_decode_block_is_one_region_with_router_captured():
+    from repro.core.ir import LIBRARY_OPS
+    from repro.models import layers as L
+    cfg, model, params = _moe_model()
+    p = jax.tree_util.tree_map(lambda a: a[0].astype(jnp.float32),
+                               params["blocks"]["moe"])
+    B, maxlen = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model))
+    ck = jnp.zeros((B, maxlen, cfg.n_kv_heads, cfg.hd), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    pos0 = jnp.asarray(4, jnp.int32)
+    cos, sin = L.rope_table(pos0 + jnp.arange(1), cfg.hd)
+    with use(TapirConfig(mode="tapir")):
+        g = tapir.capture_region(model._cached_moe_block_body, p, x, cos,
+                                 sin, ck, cv, pos0, False)
+    ops = [n.op for n in g.nodes.values()]
+    assert ops.count("gather") >= 1, "combine gather must be a region node"
+    assert ops.count("scatter") >= 1, "dispatch scatter must be a region node"
+    n_lib = sum(1 for o in ops if o in LIBRARY_OPS)
+    assert n_lib >= 5, f"expected one merged graph (attn + experts), {ops}"
+    # scatter orders after nothing reads it stale: every gather of the
+    # dispatch buffer consumes the scatter's value, not the zeros
+    scat = [n for n in g.nodes.values() if n.op == "scatter"][0]
+    assert scat.attrs.get("zero_init", False)
+
+
+def test_moe_slot_decode_matches_per_op():
+    """Slot decode (regions, router captured) == per-op control, token by
+    token, across occupancies."""
+    cfg, model, params = _moe_model()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 100, size=6).astype(np.int32)
+               for _ in range(3)]
+    outs = {}
+    for regions in (False, True):
+        clear_cache()
+        eng = ServingEngine(model, params, batch=2, max_len=32,
+                            cfg=ServeConfig(target="cpu", regions=regions))
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=4)
+                for i, p in enumerate(prompts)]
+        outs[regions] = [r.out for r in eng.run(reqs)]
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------------------------
+# scheduling: staggered == sequential == wave, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _dense_engine(slots=2):
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, batch=slots, max_len=32,
+                         cfg=ServeConfig(target="cpu"))
+
+
+def _mixed_requests(rng):
+    lens = [6, 3, 7, 5, 6, 4]
+    news = [7, 2, 5, 9, 3, 6]
+    return [Request(rid=i,
+                    prompt=rng.integers(1, 100, size=n).astype(np.int32),
+                    max_new=m)
+            for i, (n, m) in enumerate(zip(lens, news))]
+
+
+def test_staggered_equals_sequential_bitwise():
+    eng = _dense_engine(slots=2)
+    rng = np.random.default_rng(1)
+    reqs = _mixed_requests(rng)
+    staggered = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                                 max_new=r.max_new) for r in reqs])
+    assert all(r.done for r in staggered)
+    for r in reqs:
+        solo = eng.run([Request(rid=0, prompt=r.prompt.copy(),
+                                max_new=r.max_new)])[0]
+        assert solo.out == staggered[r.rid].out, \
+            f"request {r.rid}: slot co-residency changed its tokens"
+
+
+def test_slot_decode_matches_classic_prefill_decode():
+    """Cross-validation against the PRE-EXISTING path: a single request
+    through the slot engine must emit the same greedy tokens as
+    ``model.prefill`` + ``model.decode_step`` (catches systematic slot
+    bugs — wrong RoPE row, off-by-one in the per-slot mask — that
+    slot-vs-slot comparisons would share)."""
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, 100, size=6).astype(np.int32)
+    n_new = 5
+
+    with use(ServeConfig(target="cpu").tapir_config()):
+        cache = model.init_cache(1, 32)
+        logits, cache = model.prefill(params, jnp.asarray(prompt[None]),
+                                      cache)
+        classic = [int(jnp.argmax(logits, -1)[0])]
+        for _ in range(n_new - 1):
+            tok = jnp.asarray([[classic[-1]]], jnp.int32)
+            logits, cache = model.decode_step(params, tok, cache)
+            classic.append(int(jnp.argmax(logits, -1)[0]))
+
+    eng = ServingEngine(model, params, batch=1, max_len=32,
+                        cfg=ServeConfig(target="cpu"))
+    slot = eng.run([Request(rid=0, prompt=prompt.copy(), max_new=n_new)])[0]
+    assert slot.out == classic
+
+
+def test_continuous_equals_wave_bitwise():
+    eng = _dense_engine(slots=2)
+    rng = np.random.default_rng(2)
+    reqs = _mixed_requests(rng)
+    cont = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                            max_new=r.max_new) for r in reqs])
+    wave = eng.run_wave([Request(rid=r.rid, prompt=r.prompt.copy(),
+                                 max_new=r.max_new) for r in reqs])
+    assert [r.out for r in cont] == [r.out for r in wave]
+    assert all(r.done for r in cont)
+
+
+# ---------------------------------------------------------------------------
+# program cache: occupancy is data, not shape
+# ---------------------------------------------------------------------------
+
+
+def test_programs_hit_rate_stays_one_across_occupancy_changes():
+    """After warmup (one prefill bucket + one decode step + head shapes),
+    every region invocation replays from ``_PROGRAMS``: admits into other
+    slots, frees, and advancing per-slot positions never re-trace."""
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    with use(ServeConfig(target="cpu").tapir_config()):
+        sp = model.slot_params(params)
+        cache = model.init_slot_cache(2, 32)
+        toks = lambda: jnp.asarray(rng.integers(1, 100, (1, 8)), jnp.int32)
+        # warmup: one prefill (bucket 8), one decode, both head shapes
+        _, cache = model.prefill_into_slot(sp, toks(), cache, 0, 6)
+        step_toks = jnp.asarray(rng.integers(1, 100, (2, 1)), jnp.int32)
+        _, cache = model.decode_step_slots(sp, step_toks, cache)
+        miss0 = cache_stats()["misses"]
+        # occupancy changes: admit slot 1 mid-decode, free slot 0, decode on
+        _, cache = model.prefill_into_slot(sp, toks(), cache, 1, 5)
+        for _ in range(3):
+            _, cache = model.decode_step_slots(sp, step_toks, cache)
+        cache["pos"] = cache["pos"].at[0].set(0)          # free slot 0
+        _, cache = model.prefill_into_slot(sp, toks(), cache, 0, 4)
+        _, cache = model.decode_step_slots(sp, step_toks, cache)
+        stats = cache_stats()
+    assert stats["misses"] == miss0, \
+        "occupancy change must REPLAY, not re-trace (shapes are constant)"
+    assert stats["hits"] > 0
+
+
+def test_rope_table_bucketing_shares_programs_across_max_len():
+    """max_len 20 and 30 bucket to the same 32-row RoPE table, so the
+    decode-step programs are shared (no extra misses for the second
+    engine); crossing the bucket (48 -> 64 rows) re-traces once."""
+    from repro.models import layers as L
+    t20 = L.full_rope_table(20, 24)
+    t30 = L.full_rope_table(30, 24)
+    t48 = L.full_rope_table(48, 24)
+    assert t20[0] is t30[0] and t20[0].shape[0] == 32
+    assert t48[0].shape[0] == 64 and t48[0] is not t20[0]
+    assert L.bucket_pow2(1) == 8 and L.bucket_pow2(9) == 16
+
+
+def test_overflowing_request_rejected_at_admission():
+    """prompt + max_new past the slot page would silently DROP new K/V
+    rows (scatter OOB) while sampling continued — the engine must refuse
+    the request instead of corrupting its output."""
+    eng = _dense_engine(slots=1)       # max_len = 32
+    rng = np.random.default_rng(4)
+    bad = Request(rid=0, prompt=rng.integers(1, 100, size=8).astype(np.int32),
+                  max_new=30)          # 8 + 30 - 1 > 32
+    with pytest.raises(ValueError, match="overflows the slot page"):
+        eng.run([bad])
+    ok = Request(rid=0, prompt=bad.prompt.copy(), max_new=25)   # exactly fits
+    assert eng.run([ok])[0].done
+
+
+def test_max_steps_budget_is_per_request_not_global():
+    """A long queue must not starve late admits: ``max_steps`` caps each
+    request's decode budget (the old per-wave semantics), so six requests
+    of 7 tokens on one slot all finish under max_steps=8."""
+    eng = _dense_engine(slots=1)
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, 100, size=5).astype(np.int32),
+                    max_new=7)
+            for i in range(6)]
+    out = eng.run(reqs, max_steps=8)
+    assert all(r.done and len(r.out) == 7 for r in out)
+    # and an over-budget request frees its slot unfinished
+    long_req = [Request(rid=0,
+                        prompt=rng.integers(1, 100, size=5).astype(np.int32),
+                        max_new=20),
+                Request(rid=1,
+                        prompt=rng.integers(1, 100, size=5).astype(np.int32),
+                        max_new=3)]
+    out = eng.run(long_req, max_steps=4)
+    assert not out[0].done and len(out[0].out) == 5    # 1 prefill + 4 steps
+    assert out[1].done and len(out[1].out) == 3        # still served after
+
+
+def test_prompt_bucket_clamped_to_page_length():
+    """A prompt whose pow-2 bucket exceeds max_len must still admit (the
+    pad is clamped to the page; the prompt itself fits)."""
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch=2, max_len=24,
+                        cfg=ServeConfig(target="cpu"))
+    rng = np.random.default_rng(5)
+    r = Request(rid=0, prompt=rng.integers(1, 100, size=20).astype(np.int32),
+                max_new=3)             # bucket_pow2(20)=32 > max_len=24
+    out = eng.run([r])[0]
+    assert out.done and len(out.out) == 3
+
+
+def test_slot_cache_pages_update_in_place_through_engine_steps():
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    with use(ServeConfig(target="cpu").tapir_config()):
+        sp = model.slot_params(params)
+        cache = model.init_slot_cache(2, 32)
+        _, cache = model.prefill_into_slot(
+            sp, jnp.zeros((1, 8), jnp.int32), cache, 0, 6)
+        ptrs = [c.unsafe_buffer_pointer() for c in cache["k"]]
+        toks = jnp.zeros((2, 1), jnp.int32)
+        for _ in range(3):
+            _, cache = model.decode_step_slots(sp, toks, cache)
+        assert [c.unsafe_buffer_pointer() for c in cache["k"]] == ptrs, \
+            "per-layer K pages must be donated across decode steps"

@@ -375,12 +375,97 @@ def bench_serve_continuous_vs_wave(iters: int = 3, slots: int = 4,
     return out
 
 
+# ---------------------------------------------------------------------------
+# serve_mesh_vs_single: slot serving on a TP mesh (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_mesh_vs_single(iters: int = 2, json_path="BENCH_mesh.json"):
+    """Slot-paged serving on a forced-host-device ``(data, model)`` mesh
+    vs the single-device slot engine: correctness-gated, not speed-gated
+    (8 emulated host devices on one CPU pay SPMD overhead for zero real
+    parallelism — the gate asserts the mesh run takes the SLOT path, its
+    per-request outputs are bitwise-identical, and the region programs
+    carry replayed sharding constraints).  Runs through the shared
+    multi-device subprocess harness (``repro.testing`` — the same one
+    the mesh tests use) because the device-count flag must be set
+    before jax initializes."""
+    from repro.testing import run_mesh_subprocess
+
+    res = run_mesh_subprocess(f"""
+        import time
+        import repro.configs as C
+        from repro.models.base import get_model
+        from repro.serve import Request, ServeConfig, ServingEngine
+        from repro.core.tapir import clear_cache, cached_graphs
+        from repro.launch.mesh import make_test_mesh
+
+        cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                                  compute_dtype="float32")
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        lens = [6, 4, 7, 5, 6, 3, 7, 4]
+        news = [4, 24, 6, 16, 8, 20, 4, 12]
+        prompts = [rng.integers(1, 100, size=n).astype(np.int32)
+                   for n in lens]
+
+        def mk():
+            return [Request(rid=i, prompt=p.copy(), max_new=m)
+                    for i, (p, m) in enumerate(zip(prompts, news))]
+
+        for label, mesh in (("single", None),
+                            ("mesh", make_test_mesh(data=2, model=4))):
+            clear_cache()
+            eng = ServingEngine(model, params, mesh=mesh, batch=4,
+                                max_len=64, cfg=ServeConfig(target="cpu"))
+            res = eng.run(mk())        # warmup (compiles every program)
+            t0 = time.perf_counter()
+            for _ in range({iters}):
+                res = eng.run(mk())
+            wall = (time.perf_counter() - t0) / {iters}
+            toks = sum(len(r.out) for r in res)
+            result[label] = {{
+                "wall_s": wall, "tokens": toks, "tok_per_s": toks / wall,
+                "outs": [r.out for r in res],
+                "slot_path": bool(eng._slot_capable),
+                "stats": {{k: float(v) for k, v in eng.last_stats.items()}},
+                "annotated_nodes": sum(
+                    1 for g in cached_graphs().values()
+                    for n in g.nodes.values() if n.sharding),
+            }}
+        result["bitwise_match"] = (
+            result["single"]["outs"] == result["mesh"]["outs"])
+    """, timeout=1200)
+    for label in ("single", "mesh"):
+        r = res[label]
+        print(f"serve_mesh_vs_single {label:8s} {r['wall_s']*1e3:9.1f} ms "
+              f"({r['tokens']} tokens, {r['tok_per_s']:8.1f} tok/s, "
+              f"slot_path={r['slot_path']})")
+    print(f"serve_mesh_vs_single bitwise={res['bitwise_match']} "
+          f"mesh-annotated nodes={res['mesh']['annotated_nodes']}")
+    out = {"single": {k: v for k, v in res["single"].items() if k != "outs"},
+           "mesh": {k: v for k, v in res["mesh"].items() if k != "outs"},
+           "bitwise_match": res["bitwise_match"],
+           "slot_path_on_mesh": res["mesh"]["slot_path"],
+           "mesh_annotated_nodes": res["mesh"]["annotated_nodes"],
+           "config": {"mesh": "2x4 (data, model)", "slots": 4,
+                      "requests": 8,
+                      "max_new": [4, 24, 6, 16, 8, 20, 4, 12],
+                      "prompt_lens": [6, 4, 7, 5, 6, 3, 7, 4]}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
                     choices=["all", "region_vs_per_op",
                              "decode_region_vs_per_op",
-                             "serve_continuous_vs_wave"])
+                             "serve_continuous_vs_wave",
+                             "serve_mesh_vs_single"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -396,6 +481,10 @@ def main():
     if args.case == "serve_continuous_vs_wave":
         bench_serve_continuous_vs_wave(
             iters=args.iters, json_path=args.json or "BENCH_serve.json")
+        return
+    if args.case == "serve_mesh_vs_single":
+        bench_serve_mesh_vs_single(iters=args.iters,
+                                   json_path=args.json or "BENCH_mesh.json")
         return
 
     key = jax.random.PRNGKey(0)

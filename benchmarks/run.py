@@ -23,12 +23,16 @@ import numpy as np
 def check(out_dir: str, min_region_speedup: float = 1.5,
           min_decode_speedup: float = 1.3,
           min_serve_speedup: float = 1.3) -> int:
-    """Perf regression gate: run the two region benchmarks plus the
-    continuous-batching benchmark and FAIL (non-zero exit) if
-    region_vs_per_op drops below ``min_region_speedup``,
-    decode_region_vs_per_op below ``min_decode_speedup``,
-    serve_continuous_vs_wave below ``min_serve_speedup``, or any of them
-    loses bitwise-match / stops donating cache buffers."""
+    """Perf regression gate: run the two region benchmarks, the
+    continuous-batching benchmark and the mesh-serving benchmark, and
+    FAIL (non-zero exit) if region_vs_per_op drops below
+    ``min_region_speedup``, decode_region_vs_per_op below
+    ``min_decode_speedup``, serve_continuous_vs_wave below
+    ``min_serve_speedup``, any of them loses bitwise-match / stops
+    donating cache buffers, or mesh slot serving stops matching the
+    single-device engine bitwise (serve_mesh_vs_single is
+    correctness-gated only — emulated host devices are not a perf
+    proxy)."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -37,6 +41,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_decode.json"))
     sv = kernel_bench.bench_serve_continuous_vs_wave(
         json_path=os.path.join(out_dir, "BENCH_serve.json"))
+    mv = kernel_bench.bench_serve_mesh_vs_single(
+        json_path=os.path.join(out_dir, "BENCH_mesh.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -57,6 +63,15 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     if not sv["donated"]:
         failures.append("slot cache pages no longer donated across "
                         "decode steps")
+    if not mv["bitwise_match"]:
+        failures.append("mesh slot serving no longer bitwise-matches the "
+                        "single-device slot engine per request")
+    if not mv["slot_path_on_mesh"]:
+        failures.append("mesh serving fell back to padded waves (slot "
+                        "path lost)")
+    if not mv["mesh_annotated_nodes"]:
+        failures.append("mesh slot programs carry no sharding annotations "
+                        "(constraints dropped by the tracer again)")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -64,7 +79,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         return 1
     print(f"CHECK OK: region {rv['speedup']:.2f}x, "
           f"decode {dv['speedup']:.2f}x, "
-          f"serve {sv['speedup']:.2f}x, bitwise, donated")
+          f"serve {sv['speedup']:.2f}x, mesh bitwise "
+          f"({mv['mesh_annotated_nodes']} sharded nodes), donated")
     return 0
 
 

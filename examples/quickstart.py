@@ -112,8 +112,6 @@ def continuous_batching_demo():
     occupancy.  Wave scheduling (the old engine: decode until the slowest
     wave member drains) runs the same primitives, so the outputs match
     bitwise and the tokens/sec gap is pure scheduler utilization."""
-    import time as _time
-
     import dataclasses
     import repro.configs as C
     from repro.models.base import get_model
@@ -134,17 +132,22 @@ def continuous_batching_demo():
     eng = ServingEngine(model, params, batch=4, max_len=64,
                         cfg=ServeConfig(target="cpu"))
     eng.run(mk())                               # warmup (compile programs)
-    t0 = _time.perf_counter()
     wave = eng.run_wave(mk())
-    t_wave = _time.perf_counter() - t0
-    t0 = _time.perf_counter()
+    ws = eng.last_stats
     cont = eng.run(mk())
-    t_cont = _time.perf_counter() - t0
-    toks = sum(len(r.out) for r in cont)
+    cs = eng.last_stats
     match = all(a.out == b.out for a, b in zip(wave, cont))
-    print(f"continuous batching: {toks} tokens — wave "
-          f"{toks/t_wave:.0f} tok/s, continuous {toks/t_cont:.0f} tok/s "
-          f"({t_wave/t_cont:.2f}x), per-request outputs match: {match}")
+    print(f"continuous batching: {cs['tokens']} tokens — wave "
+          f"{ws['tok_per_s']:.0f} tok/s, continuous "
+          f"{cs['tok_per_s']:.0f} tok/s "
+          f"({cs['tok_per_s']/ws['tok_per_s']:.2f}x), per-request outputs "
+          f"match: {match}")
+    for name, st in (("wave", ws), ("continuous", cs)):
+        print(f"  {name:10s} stats: {st['tok_per_s']:7.1f} tok/s, mean "
+              f"occupancy {st['mean_occupancy']:.2f}, "
+              f"admitted {st['admitted']}, rejected {st['rejected']}, "
+              f"preempted {st['preempted']} "
+              f"({st['decode_steps']} decode steps)")
 
 
 def main():

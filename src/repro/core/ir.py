@@ -119,6 +119,15 @@ class Node:
     # because they read the pre-write buffer (enforced by topo_order).
     donates: Optional[int] = None
     anti: tuple[int, ...] = ()
+    # Sharding: a logical PartitionSpec-like tuple over the output dims —
+    # each entry a mesh axis name, a tuple of names, or None (replicated).
+    # Recorded by the tracer when model code constrains a traced value
+    # (``shard_act``/``with_sharding_constraint``); every pass can see it
+    # (CSE only unifies equal shardings, fusion propagates it to the node
+    # that takes over producing the value) and lowering replays it as a
+    # ``jax.lax.with_sharding_constraint`` under the ambient mesh (no-op
+    # off-mesh).  Participates in ``key()``/``signature()``.
+    sharding: Optional[tuple] = None
     schedule: Schedule = field(default_factory=Schedule)
 
     def flops(self) -> float:
@@ -160,10 +169,13 @@ class Node:
     def key(self) -> tuple:
         """Structural hash key for CSE.  ``donates`` is part of the key (two
         writes with different aliasing intent are never the same value for
-        buffer-reuse purposes); ``anti`` is ordering-only and excluded."""
+        buffer-reuse purposes), and so is ``sharding`` (two structurally
+        identical nodes constrained to different layouts are different
+        values — unifying them would silently drop one constraint);
+        ``anti`` is ordering-only and excluded."""
         frozen_attrs = tuple(sorted((k, _freeze(v)) for k, v in self.attrs.items()))
         return (self.op, self.inputs, self.ttype, frozen_attrs, self.pdims,
-                self.rdims, self.donates)
+                self.rdims, self.donates, self.sharding)
 
 
 def _freeze(v):
@@ -201,7 +213,8 @@ class TaskGraph:
     # -- construction -------------------------------------------------------
     def add(self, op: str, inputs: Iterable[int], ttype: TensorType,
             pdims: tuple[int, ...] = (), rdims: tuple[tuple[str, int], ...] = (),
-            donates: Optional[int] = None, **attrs) -> int:
+            donates: Optional[int] = None, sharding: Optional[tuple] = None,
+            **attrs) -> int:
         assert op in PRIMITIVE_OPS or op in LIBRARY_OPS, f"unknown op {op}"
         nid = next(self._counter)
         inputs = tuple(inputs)
@@ -214,7 +227,8 @@ class TaskGraph:
             anti = tuple(c for c in self._ensure_cons().get(donates, ()))
         self.nodes[nid] = Node(nid, op, inputs, ttype, attrs,
                                tuple(pdims), tuple(rdims),
-                               donates=donates, anti=anti)
+                               donates=donates, anti=anti,
+                               sharding=tuple(sharding) if sharding else None)
         if self._cons is not None:
             self._cons[nid] = set()
             for i in inputs:
@@ -370,6 +384,7 @@ class TaskGraph:
             sch = f" sched={n.schedule.dim_binding}" if n.schedule.dim_binding else ""
             ali = f" donates=%{n.donates}" if n.donates is not None else ""
             ali += f" anti={list(n.anti)}" if n.anti else ""
+            ali += f" sharding={list(n.sharding)}" if n.sharding else ""
             lines.append(
                 f"  %{nid} = {n.op}{list(n.inputs)} :: {n.ttype.dtype}{list(n.ttype.shape)}"
                 f" pdims={list(n.pdims)} rdims={list(n.rdims)}{epi}{sch}{ali}")

@@ -15,6 +15,7 @@ differently depending on the schedule the passes attached:
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Any, Callable
 
@@ -302,18 +303,63 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
     raise NotImplementedError(op)
 
 
+def _multi_device_mesh():
+    """The ambient mesh when it has >1 device (constraints are inert on a
+    single device); probe shared with the pass pipeline."""
+    from .passes import ambient_mesh
+    m = ambient_mesh()
+    return m if m is not None and m.size > 1 else None
+
+
+def _apply_sharding(val, spec: tuple, mesh) -> Any:
+    """Replay a captured sharding annotation as a real constraint under
+    ``mesh``.  Degrades to a no-op when an axis the spec names is missing
+    (a program somehow lowered off-mesh) or the constraint can't attach
+    (outside a trace on some jax versions) — constraints are performance
+    hints, numerics never depend on them."""
+    names = set()
+    for entry in spec:
+        if entry is not None:
+            names.update(entry if isinstance(entry, tuple) else (entry,))
+    # an all-None spec is an explicit replication constraint — applied
+    # like any other; only specs naming a MISSING axis degrade to no-ops
+    if not names.issubset(set(mesh.axis_names)):
+        return val
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(
+            val, NamedSharding(mesh, P(*spec)))
+    except (ValueError, TypeError) as e:
+        # an all-None spec can be a bitwise guard (explicit replication
+        # ahead of an out-projection), so a drop must not be silent —
+        # warn at trace time and degrade
+        warnings.warn(f"captured sharding constraint {spec} could not be "
+                      f"applied under mesh {mesh.axis_names}: {e}")
+        return val
+
+
 def emit(g: TaskGraph, backend: str = "cpu",
          bf16_partials: bool = False) -> Callable[[dict], tuple]:
-    """Compile the scheduled graph into a callable(inputs dict) -> outputs."""
+    """Compile the scheduled graph into a callable(inputs dict) -> outputs.
+
+    Nodes carrying a ``sharding`` annotation (captured by the region
+    tracer from ``shard_act``/``with_sharding_constraint`` calls) are
+    re-constrained under the ambient mesh — the constraint a traced
+    tensor would have received eagerly is replayed at lowering, so
+    regions and GSPMD compose.  Off-mesh the annotations are inert."""
     order = g.topo_order()
     nodes = [g.nodes[nid] for nid in order]
     outputs = list(g.outputs)
+    any_sharded = any(n.sharding for n in nodes)
 
     def run(inputs: dict) -> tuple:
         env: dict[int, Any] = {}
+        mesh = _multi_device_mesh() if any_sharded else None
         for node in nodes:
-            env[node.nid] = _lower_node(node, env, inputs, backend,
-                                        bf16_partials)
+            val = _lower_node(node, env, inputs, backend, bf16_partials)
+            if node.sharding is not None and mesh is not None:
+                val = _apply_sharding(val, node.sharding, mesh)
+            env[node.nid] = val
         return tuple(env[o] for o in outputs)
 
     return run

@@ -20,24 +20,55 @@ from .inline import expose_libraries, seal_libraries
 _current_mesh = None
 
 
-def mesh_has_model_axis() -> bool:
-    """True when an ambient mesh with a "model" axis is active — sharded
-    execution, where fusion shape must keep TP shards slice-aligned.
-    Runs on the op-dispatch hot path (part of every cache key), so the
-    sharding import is resolved once and the probe itself is two attribute
-    lookups."""
+def ambient_mesh():
+    """The ambient mesh, or None.  Runs on the op-dispatch hot path (part
+    of every cache key), so the sharding import is resolved once and the
+    probe itself is two attribute lookups."""
     global _current_mesh
     if _current_mesh is None:
         try:
             from repro.dist.sharding import current_mesh as _cm
         except Exception:
-            return False
+            return None
         _current_mesh = _cm
     try:
-        m = _current_mesh()
-        return m is not None and "model" in m.axis_names
+        return _current_mesh()
     except Exception:
-        return False
+        return None
+
+
+def mesh_has_model_axis() -> bool:
+    """True when an ambient mesh with a "model" axis is active — sharded
+    execution, where fusion shape must keep TP shards slice-aligned."""
+    m = ambient_mesh()
+    return m is not None and "model" in m.axis_names
+
+
+#: last (mesh object, fingerprint) — a mesh's axes/sizes are immutable,
+#: and the fingerprint sits on the op-dispatch hot path (every cache
+#: key), so the tuple build and jax-0.4's dict-allocating ``Mesh.shape``
+#: property run once per mesh, not once per op
+_fp_cache: tuple = (None, ())
+
+
+def mesh_fingerprint() -> tuple:
+    """Full structural identity of the ambient mesh: ((axis, size), ...)
+    pairs, or () with no mesh.  Part of every compile-cache key — two
+    different meshes must never replay each other's programs (a program
+    compiled for model=4 is WRONG under model=2 even though both "have a
+    model axis"), and the sharding constraints captured on region nodes
+    are resolved against a specific mesh shape."""
+    global _fp_cache
+    m = ambient_mesh()
+    if m is None:
+        return ()
+    cached_m, fp = _fp_cache
+    if cached_m is m:
+        return fp
+    shape = m.shape   # jax 0.4's Mesh.shape rebuilds a dict per access
+    fp = tuple((a, int(shape[a])) for a in m.axis_names)
+    _fp_cache = (m, fp)
+    return fp
 
 
 def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
@@ -66,5 +97,8 @@ def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
         name=cm.name + "+noserial", peak_flops=cm.peak_flops, hbm_bw=cm.hbm_bw,
         ici_bw=cm.ici_bw, vmem_bytes=cm.vmem_bytes, mxu=cm.mxu,
         grain_flops=0.0, unroll_max_trip=cm.unroll_max_trip)
-    assign_schedules(g, cm_eff, backend=backend)
+    # per-shard costs: nodes carrying a sharding constraint do 1/shard of
+    # the work per device — grain/GQA decisions must see per-shard numbers
+    assign_schedules(g, cm_eff, backend=backend,
+                     mesh_axes=dict(mesh_fingerprint()))
     return g

@@ -9,7 +9,14 @@ from ..ir import TaskGraph
 
 
 def cse(g: TaskGraph) -> int:
-    """Hash-cons nodes in topological order; returns #nodes eliminated."""
+    """Hash-cons nodes in topological order; returns #nodes eliminated.
+
+    Sharding-aware: ``Node.key()`` includes the ``sharding`` annotation,
+    so two structurally identical nodes unify only when their constraints
+    are compatible (equal, including both-unconstrained).  Merging a
+    ``("model",)``-constrained value with a replicated or differently-
+    constrained twin would silently drop one layout and force GSPMD to
+    pick — the constraint exists precisely to stop that."""
     seen: dict[tuple, int] = {}
     eliminated = 0
     for nid in g.topo_order():

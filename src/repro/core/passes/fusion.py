@@ -58,7 +58,13 @@ def fuse_added_gemms(g: TaskGraph, max_iters: int = 8) -> int:
             n = g.nodes[nid]
             if (n.op == "ew" and n.attrs.get("fn") == "add" and len(n.inputs) == 2
                     and all(_is_plain_gemm(g, i) for i in n.inputs)
-                    and all(len(cons[i]) == 1 and i not in g.outputs for i in n.inputs)):
+                    and all(len(cons[i]) == 1 and i not in g.outputs for i in n.inputs)
+                    # a constrained member GEMM would VANISH into the fused
+                    # node and its sharding with it — refuse, like CSE, rather
+                    # than silently drop a constraint (the add's own
+                    # constraint is propagated below; the members' have no
+                    # corresponding value after the rewrite)
+                    and all(g.nodes[i].sharding is None for i in n.inputs)):
                 a, b = (g.nodes[i] for i in n.inputs)
                 xa, wa = a.inputs
                 xb, wb = b.inputs
@@ -70,6 +76,7 @@ def fuse_added_gemms(g: TaskGraph, max_iters: int = 8) -> int:
         if target is None:
             return fused
         nid, a, b, xa, wa, xb, wb = target
+        add_sharding = g.nodes[nid].sharding
         ka, kb = a.attrs["k"], b.attrs["k"]
         x_t = g.nodes[xa].ttype
         xc_t = TensorType(x_t.shape[:-1] + (ka + kb,), x_t.dtype)
@@ -78,9 +85,12 @@ def fuse_added_gemms(g: TaskGraph, max_iters: int = 8) -> int:
         w_t = g.nodes[wa].ttype
         wc_t = TensorType((ka + kb, w_t.shape[1]), w_t.dtype)
         wc = g.add("concat", (wa, wb), wc_t, pdims=(0, 1), axis=0)
+        # the fused GEMM takes over producing the add's value, so it
+        # inherits the add's sharding constraint (same output space)
         mm = g.add("matmul", (xc, wc), a.ttype,
                    pdims=tuple(range(len(a.ttype.shape))),
-                   rdims=(("k", ka + kb),), k=ka + kb, exposed=True)
+                   rdims=(("k", ka + kb),), k=ka + kb, exposed=True,
+                   sharding=add_sharding)
         g.replace_uses(nid, mm)
         g.prune()
         fused += 1
@@ -143,8 +153,13 @@ def fuse_shared_input(g: TaskGraph, max_iters: int = 8,
                            TensorType((1,) + lead + (width,), dtype),
                            pdims=tuple(range(len(out_t.shape))),
                            axis=0, start=i, limit=i + 1)
+                # the reshape takes over producing the member's value, so
+                # a sharding constraint on the member rides along (each
+                # stack slot keeps its own TP shard — the constraint stays
+                # slice-aligned)
                 rs = g.add("reshape", (sl,), g.nodes[m].ttype,
-                           pdims=tuple(range(len(lead) + 1)))
+                           pdims=tuple(range(len(lead) + 1)),
+                           sharding=g.nodes[m].sharding)
                 g.replace_uses(m, rs)
         else:
             widths = [g.nodes[m].ttype.shape[-1] for m in members]
@@ -158,7 +173,8 @@ def fuse_shared_input(g: TaskGraph, max_iters: int = 8,
             for m, w in zip(members, widths):
                 sl = g.add("slice", (mm,), g.nodes[m].ttype,
                            pdims=tuple(range(len(out_t.shape))),
-                           axis=-1, start=off, limit=off + w)
+                           axis=-1, start=off, limit=off + w,
+                           sharding=g.nodes[m].sharding)
                 g.replace_uses(m, sl)
                 off += w
         g.prune()
@@ -203,6 +219,12 @@ def fuse_epilogues(g: TaskGraph) -> int:
                            {"head_pos": head_pos, "dtype": c.ttype.dtype})
             g.replace_uses(c.nid, nid)
             n.ttype = TensorType(n.ttype.shape, c.ttype.dtype)
+            # the library op now produces the consumer's value: its
+            # constraint (if any) propagates to the fused node; the head's
+            # own pre-epilogue constraint no longer names a materialized
+            # value and is superseded
+            if c.sharding is not None:
+                n.sharding = c.sharding
             g.remove_node(c.nid)
             folded += 1
     if folded:

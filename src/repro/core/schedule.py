@@ -19,6 +19,7 @@ benchmark.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -102,7 +103,35 @@ def pick_attention_tiles(s_q: int, s_kv: int, d: int, dtype: str, cm: CostModel)
     return {"bq": min(bq, max(s_q, 1)), "bkv": min(bkv, max(s_kv, 1))}
 
 
-def pick_gqa_impl(node: Node, cm: CostModel, backend: str) -> str:
+def _dim_shard(node: Node, d: int, mesh_axes: Optional[dict]) -> int:
+    """Mesh-axis product this output dim is split over (1 if unsharded)."""
+    if not mesh_axes or node.sharding is None or d >= len(node.sharding):
+        return 1
+    entry = node.sharding[d]
+    if entry is None:
+        return 1
+    f = 1
+    for ax in (entry if isinstance(entry, tuple) else (entry,)):
+        f *= mesh_axes.get(ax, 1)
+    return f
+
+
+def shard_factor(node: Node, mesh_axes: Optional[dict] = None) -> float:
+    """Number of shards this node's output is split into: the product of
+    the mesh-axis sizes named by its ``sharding`` annotation.  Per-device
+    work/bytes of a partitioned node are the logical totals divided by
+    this factor — the cost model must reason per shard, or a node that is
+    tiny per device would still look big enough to parallelize."""
+    if not mesh_axes or node.sharding is None:
+        return 1.0
+    f = 1.0
+    for d in range(len(node.sharding)):
+        f *= _dim_shard(node, d, mesh_axes)
+    return max(f, 1.0)
+
+
+def pick_gqa_impl(node: Node, cm: CostModel, backend: str,
+                  mesh_axes: Optional[dict] = None) -> str:
     """GQA materialized attention: grouped einsum (no K/V copy) vs
     ``jnp.repeat`` of K/V to full head count (BLAS-shaped batched GEMM).
 
@@ -112,7 +141,16 @@ def pick_gqa_impl(node: Node, cm: CostModel, backend: str) -> str:
     D=64), so repeat wins while the copy time stays under
     ``gqa_repeat_frac`` of the attention's compute time.  Decode against a
     long cache (S=1, KV bytes dominate) and the TPU target (flash kernel /
-    grouped contraction, no HBM copy wanted) stay grouped."""
+    grouped contraction, no HBM copy wanted) stay grouped.
+
+    ``mesh_axes`` makes the comparison per-shard — and the two sides
+    scale DIFFERENTLY: compute divides by the full shard factor of the
+    output, while the K/V repeat-copy only shrinks along dims where K/V
+    itself is partitioned (the batch dim, and the head dim only when
+    ``Hkv`` divides that axis).  Small-``Hkv`` TP is the common case:
+    q-heads shard over ``model`` but K/V stays replicated, so per-device
+    compute drops while the copy doesn't — sharding biases the choice
+    toward grouped, exactly the physical intuition."""
     b, s, h, d = node.attrs["q_shape"]
     hkv = node.attrs.get("kv_heads", h)
     if backend == "tpu" or not hkv or hkv >= h:
@@ -120,8 +158,13 @@ def pick_gqa_impl(node: Node, cm: CostModel, backend: str) -> str:
     grp = h // hkv
     eb = dtype_bytes(node.ttype.dtype)
     skv = node.attrs["kv_len"]
-    copy_s = 2.0 * (grp - 1) * b * skv * hkv * d * eb / cm.hbm_bw
-    compute_s = node.flops() / cm.peak_flops
+    # output dims are q-shaped [B, S, H, D]: dim 0 = batch, dim 2 = heads
+    h_split = _dim_shard(node, 2, mesh_axes)
+    kv_shard = _dim_shard(node, 0, mesh_axes) * (
+        h_split if hkv % max(h_split, 1) == 0 else 1)
+    copy_s = 2.0 * (grp - 1) * b * skv * hkv * d * eb / cm.hbm_bw \
+        / max(kv_shard, 1)
+    compute_s = node.flops() / cm.peak_flops / shard_factor(node, mesh_axes)
     return "repeat" if copy_s <= cm.gqa_repeat_frac * compute_s else "grouped"
 
 
@@ -130,7 +173,8 @@ def pick_gqa_impl(node: Node, cm: CostModel, backend: str) -> str:
 # ---------------------------------------------------------------------------
 
 
-def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskGraph:
+def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu",
+                     mesh_axes: Optional[dict] = None) -> TaskGraph:
     """Bind schedules on the optimized graph.
 
     Policy (per parallel dim, largest extent first):
@@ -139,14 +183,19 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskG
       3. trailing dims of size >= 8 become ``vector`` (VPU lanes);
       4. everything else is ``serial`` — small-task serialization.
     Library ops additionally get strip-mined tiles and (on TPU) the Pallas
-    kernel lowering flag."""
+    kernel lowering flag.  ``mesh_axes`` (axis name -> size, from the
+    ambient mesh) makes every cost PER-SHARD: a node whose ``sharding``
+    partitions it over mesh axes moves/computes 1/shard per device, so
+    grain-size serialization and the GQA impl choice divide by the shard
+    factor."""
     cache_ops = ("dynamic_update_slice", "dynamic_slice", "index", "slice",
                  "gather", "scatter")
     for nid in g.topo_order():
         node = g.nodes[nid]
         if node.op in ("input", "const"):
             continue
-        work = node.flops() + 1.0
+        shard = shard_factor(node, mesh_axes)
+        work = (node.flops() + 1.0) / shard
         shape = node.ttype.shape
         # data-movement ops have no flops; their cost (and the grain for
         # serialization) is bytes moved, not arithmetic
@@ -160,9 +209,10 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskG
                 upd_t = g.nodes[node.inputs[-1]].ttype
             else:
                 upd_t = None
-            moved = node.bytes_moved(upd_t)
+            moved = node.bytes_moved(upd_t) / shard
             node.schedule.notes.append(
                 f"cache-op {moved:.0f}B moved"
+                + (f" (1/{shard:.0f} per shard)" if shard > 1 else "")
                 + (" in-place (buffer donated)" if node.donates is not None
                    else ""))
         grain = cm.grain_bytes if moved is not None else cm.grain_flops
@@ -191,7 +241,8 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu") -> TaskG
             node.schedule.tile = pick_attention_tiles(s, node.attrs["kv_len"], d_,
                                                       node.ttype.dtype, cm)
             node.schedule.use_kernel = backend == "tpu"
-            node.attrs["gqa_impl"] = pick_gqa_impl(node, cm, backend)
+            node.attrs["gqa_impl"] = pick_gqa_impl(node, cm, backend,
+                                                   mesh_axes=mesh_axes)
             if node.attrs["gqa_impl"] == "repeat":
                 node.schedule.notes.append("gqa: repeat K/V (BLAS wins, "
                                            "copy cost amortized)")

@@ -62,7 +62,7 @@ import numpy as np
 
 from .ir import TaskGraph, TensorType
 from .lowering import emit
-from .passes import mesh_has_model_axis, run_pipeline
+from .passes import mesh_fingerprint, run_pipeline
 from .schedule import CPU_COST_MODEL, CostModel
 
 # ---------------------------------------------------------------------------
@@ -132,11 +132,16 @@ def _tt(x) -> TensorType:
 
 
 def _cfg_key(cfg: TapirConfig, backend: str) -> tuple:
-    # the ambient mesh changes the fusion SHAPE (stacked vs concat QKV), so
-    # compiled artifacts must not leak between sharded and unsharded contexts
+    # The ambient mesh changes the fusion SHAPE (stacked vs concat QKV),
+    # the sharding constraints captured on region nodes, and the meaning
+    # of every mesh axis name those constraints reference — so compiled
+    # artifacts must not leak between meshes.  The FULL fingerprint (axis
+    # names + sizes) is the key component: fingerprinting only "has a
+    # model axis" let two different TP meshes replay each other's
+    # programs, executing constraints resolved for the wrong axis size.
     return (cfg.mode, backend, cfg.ablate_serialization,
             cfg.resolved_cost_model().name, cfg.bf16_partials,
-            mesh_has_model_axis())
+            mesh_fingerprint())
 
 
 def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
@@ -499,6 +504,33 @@ def _resolve_reshape(cur: tuple, shape: tuple) -> tuple[int, ...]:
 
 def is_traced(x) -> bool:
     return isinstance(x, TracedTensor)
+
+
+def annotate_sharding(x, spec):
+    """Record a sharding constraint on the node producing ``x``.
+
+    ``spec`` is a PartitionSpec-like tuple (mesh axis name / tuple of
+    names / None per output dim), already resolved against the ambient
+    mesh by the caller (``repro.dist.shard_act``).  The annotation rides
+    the node through every pass — CSE won't unify it with a differently-
+    constrained twin, fusion moves it to whichever node takes over
+    producing the value — and lowering replays it as
+    ``jax.lax.with_sharding_constraint`` under the ambient mesh.  Safe to
+    call on anything: non-traced values and closed regions pass through
+    untouched, so the tracer never silently DROPS a constraint the per-op
+    path would have applied.  An all-``None`` spec is still recorded — it
+    is an explicit "replicated" constraint, which stops GSPMD from
+    k-splitting a downstream contraction into partial sums whose
+    all-reduce would reorder float adds (callers only annotate under an
+    active multi-device mesh, so single-device keys never churn)."""
+    if not isinstance(x, TracedTensor):
+        return x
+    spec = tuple(spec)
+    reg = x._region
+    if reg.closed or x.nid is None:
+        return x
+    reg.g.nodes[x.nid].sharding = spec
+    return x
 
 
 class _Region:

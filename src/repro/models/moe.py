@@ -108,8 +108,10 @@ class MoELM(DenseLM):
         if tapir.is_traced(x):
             # open region: the whole dispatch (top-k routing, token
             # scatter, expert GEMMs, gather-back, combine) captures as
-            # graph nodes — regions drop sharding constraints anyway, so
-            # the EP shard_map path is never taken from inside a region
+            # graph nodes, with the expert-dim sharding constraints
+            # recorded on them (replayed at lowering under the mesh).
+            # The EP shard_map path stays per-op only — shard_map's
+            # per-shard python callable can't trace into the IR.
             return self._moe_ffn_traced(p, x)
         mesh = None
         try:
@@ -256,7 +258,12 @@ class MoELM(DenseLM):
         src = tapir.lift(_dispatch_src, xt, keep, k=K, cdt=cdt)
         ef, pf = eidx.reshape(T * K), pos.reshape(T * K)
         xe = tapir.scatter_new((E, cap, d), cdt, (ef, pf), src, mode="add")
+        # same constraints the per-op dispatch applies: on a mesh the
+        # expert dim of the dispatch/combine buffers shards over "model"
+        # (captured as node annotations, replayed at lowering)
+        xe = shard_act(xe, "expert", None, None)
         ye = tapir.expert_mlp(xe, p["ewg"], p["ewu"], p["ewd"], cfg.act)
+        ye = shard_act(ye, "expert", None, None)
         fetched = tapir.gather(ye, (ef, pf))
         out = tapir.lift(_combine_expert_out, fetched, keep, gate,
                          k=K, cdt=cdt)

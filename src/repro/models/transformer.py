@@ -91,7 +91,17 @@ class DenseLM(BaseModel):
             else:
                 o = _decode_attention(q, ck, cv, cpos + S)
             kv_cache = (ck, cv)
+        # heads-over-model on the attention node itself: per-head compute
+        # is bitwise under this split, and the annotation is what lets
+        # schedule.pick_gqa_impl cost the node per shard
+        o = shard_act(o, "batch", None, "heads", None)
         o = o.reshape(B, S, H * hd)
+        # gather the head-sharded attention output BEFORE the out-proj:
+        # leaving it sharded makes GSPMD k-split the wo GEMM into per-rank
+        # partial sums whose all-reduce reorders float adds — the
+        # all-gather keeps mesh execution bitwise-equal to single device
+        # (d_model bytes are tiny next to the score matrices)
+        o = shard_act(o, "batch", None, None)
         out = tapir.linear(o, p["wo"])
         return (out, kv_cache) if kv_cache is not None else (out, None)
 
@@ -266,6 +276,20 @@ class DenseLM(BaseModel):
                 "v": [jnp.zeros(shape, kv) for _ in range(cfg.n_layers)],
                 "pos": jnp.zeros((slots,), jnp.int32)}
 
+    def slot_cache_specs(self, slots: int, max_len: int) -> dict:
+        return jax.eval_shape(lambda: self.init_slot_cache(slots, max_len))
+
+    def slot_cache_axes(self) -> dict:
+        """Logical axes of the slot pages [slots, max_len, Hkv, hd]: the
+        slots dim shards over the data axes like a batch, heads over
+        ``model`` when divisible.  The max_len dim stays UNSHARDED — the
+        per-slot scatters write at data-dependent positions, so a
+        "kvseq"-style split would turn every decode write into a
+        collective."""
+        a = ("batch", None, "kv", None)
+        L = self.cfg.n_layers
+        return {"k": [a] * L, "v": [a] * L, "pos": ()}
+
     def slot_params(self, params) -> dict:
         """Per-layer param dicts + head params with STABLE array ids:
         slicing/casting is hoisted out of the decode loop so every region
@@ -289,7 +313,12 @@ class DenseLM(BaseModel):
     def _slot_attn_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
         """Attention sub-block over the slot page.  All data-dependent
         pieces are graph values: RoPE rows gather at ``pos``, K/V scatter
-        at (slot, pos[slot]), and the decode mask reads ``pos + 1``."""
+        at (slot, pos[slot]), and the decode mask reads ``pos + 1``.  On
+        a mesh the ``shard_act`` constraints are captured as ``sharding``
+        annotations on the region nodes and replayed at lowering — the
+        same TP layout as the padded-wave path (heads over model, slots
+        over data), with the cache scatters constrained to the pages'
+        NamedShardings so the donated writes stay in place per shard."""
         cfg = self.cfg
         B = x.shape[0]
         H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -299,6 +328,9 @@ class DenseLM(BaseModel):
         q = q.reshape(B, 1, H, hd)
         k = k.reshape(B, 1, Hkv, hd)
         v = v.reshape(B, 1, Hkv, hd)
+        q = shard_act(q, "batch", None, "heads", None)
+        k = shard_act(k, "batch", None, "kv", None)
+        v = shard_act(v, "batch", None, "kv", None)
         rot2 = rope_cos.shape[-1]
         cos = tapir.gather(rope_cos, (pos,)).reshape(B, 1, rot2)
         sin = tapir.gather(rope_sin, (pos,)).reshape(B, 1, rot2)
@@ -308,9 +340,14 @@ class DenseLM(BaseModel):
         slots_iota = np.arange(B)
         ck = tapir.scatter(ck, (slots_iota, pos), k.reshape(B, Hkv, hd))
         cv = tapir.scatter(cv, (slots_iota, pos), v.reshape(B, Hkv, hd))
+        ck = shard_act(ck, "batch", None, "kv", None)
+        cv = shard_act(cv, "batch", None, "kv", None)
         o = _decode_attention(q, ck, cv, pos + 1)
-        x = x + tapir.linear(o.reshape(B, 1, H * hd), p["wo"])
-        return x, ck, cv
+        o = shard_act(o, "batch", None, "heads", None)
+        # all-gather before wo so GSPMD never k-splits it (see _attn)
+        o = shard_act(o.reshape(B, 1, H * hd), "batch", None, None)
+        x = x + tapir.linear(o, p["wo"])
+        return shard_act(x, "batch", None, None), ck, cv
 
     def _slot_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
         x, ck, cv = self._slot_attn_body(p, x, rope_cos, rope_sin, ck, cv,
@@ -330,13 +367,21 @@ class DenseLM(BaseModel):
         q = q.reshape(B, S, H, hd)
         k = k.reshape(B, S, Hkv, hd)
         v = v.reshape(B, S, Hkv, hd)
+        q = shard_act(q, None, None, "heads", None)
+        k = shard_act(k, None, None, "kv", None)
+        v = shard_act(v, None, None, "kv", None)
         frac = self._rope_frac()
         q = L.apply_rope(q, cos, sin, frac)
         k = L.apply_rope(k, cos, sin, frac)
         ck = tapir.cache_write(ck, k, (slot, 0, 0, 0))
         cv = tapir.cache_write(cv, v, (slot, 0, 0, 0))
+        ck = shard_act(ck, "batch", None, "kv", None)
+        cv = shard_act(cv, "batch", None, "kv", None)
         o = tapir.attention(q, k, v, causal=True)
-        x = x + tapir.linear(o.reshape(B, S, H * hd), p["wo"])
+        o = shard_act(o, None, None, "heads", None)
+        # all-gather before wo so GSPMD never k-splits it (see _attn)
+        o = shard_act(o.reshape(B, S, H * hd), None, None, None)
+        x = x + tapir.linear(o, p["wo"])
         return x, ck, cv
 
     def _slot_prefill_block_body(self, p, x, cos, sin, ck, cv, slot):
@@ -347,7 +392,8 @@ class DenseLM(BaseModel):
 
     def _slot_head_body(self, hp, x):
         x = self._norm(x, hp["ln_f"])
-        return tapir.linear(x, hp["w"])[:, -1]
+        logits = tapir.linear(x, hp["w"])[:, -1]
+        return shard_act(logits, "batch", "vocab")
 
     def _slot_bodies(self) -> dict:
         return {"dense": self._slot_block_body}

@@ -26,15 +26,29 @@ serve_continuous_vs_wave`` measures the utilization gap on mixed-length
 requests, with bitwise-identical per-request outputs (per-slot compute
 never mixes rows across slots).
 
-The pjit path (``make_prefill_step`` / ``make_decode_step``) is unchanged:
-on a mesh, decode lowers with the KV cache's sequence dim sharded over the
-``model`` axis ("kvseq") and the engine falls back to padded-wave
-scheduling — slot scheduling composes with meshes once region nodes carry
-sharding attrs (see ROADMAP).  ``ServeConfig.regions=False`` is the
-per-op control: the same slot loop with every op dispatched eagerly.
+**Meshes.**  Slot scheduling composes with tensor parallelism: on a mesh
+the engine runs the SAME slot loop — region programs capture under the
+ambient mesh (the mesh fingerprint is part of every program key), the
+``shard_act`` constraints inside the slot bodies are recorded as
+``sharding`` annotations on region nodes and replayed as
+``jax.lax.with_sharding_constraint`` at lowering, and the KV pages get
+``[slots, max_len]`` NamedShardings from :func:`slot_cache_shardings`
+(slots over the data axes, heads over ``model`` when divisible) so the
+donated scatter writes stay in place per shard.  Per-request outputs are
+bitwise-identical to the single-device slot engine.  Only families
+without slot support (SSM/hybrid/encdec) still use the pjit'd padded-wave
+loop (``make_prefill_step`` / ``make_decode_step``, KV sequence dim
+sharded as "kvseq").
+
+``ServeConfig.regions=False`` is the per-op control: the same slot loop
+with every op dispatched eagerly.  Every ``run``/``run_wave`` call
+populates ``ServingEngine.last_stats`` (tokens/sec, mean slot occupancy,
+admitted/rejected/preempted counts).
 """
 from __future__ import annotations
 
+import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -62,6 +76,12 @@ class ServeConfig:
     # jit — see module docstring).  False = per-op control (the
     # decode_region_vs_per_op A/B).
     regions: bool = True
+    # what to do with a request whose prompt + max_new overflows the slot
+    # page: "strict" raises at admission (default — an overflow would
+    # silently drop K/V rows and corrupt the output); "reject" marks it
+    # done=False, counts it in ``last_stats["rejected"]`` and serves the
+    # rest of the queue.
+    admit_policy: str = "strict"
 
     def tapir_config(self) -> TapirConfig:
         cm = CostModel() if self.target == "tpu" else CPU_COST_MODEL
@@ -69,11 +89,9 @@ class ServeConfig:
                            regions=self.regions)
 
 
-def cache_shardings(model, mesh, batch: int, max_len: int):
-    """NamedSharding tree for the model's decode cache."""
-    specs = model.cache_specs(batch, max_len)
-    axes = model.cache_axes()
-
+def _shardings(specs, axes, mesh):
+    """NamedSharding tree from parallel (ShapeDtypeStruct, logical-axes)
+    trees — the single rule set for every serving cache layout."""
     def one(sds, ax):
         if not ax:
             return NamedSharding(mesh, P())
@@ -87,6 +105,22 @@ def cache_shardings(model, mesh, batch: int, max_len: int):
 
     return jax.tree_util.tree_map(one, specs, axes,
                                   is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_shardings(model, mesh, batch: int, max_len: int):
+    """NamedSharding tree for the model's padded-wave decode cache."""
+    return _shardings(model.cache_specs(batch, max_len),
+                      model.cache_axes(), mesh)
+
+
+def slot_cache_shardings(model, mesh, slots: int, max_len: int):
+    """NamedSharding tree for the slot-paged decode cache: per-layer
+    ``[slots, max_len, Hkv, hd]`` pages with slots over the data axes and
+    heads over ``model`` (when divisible); the ``max_len`` dim stays
+    unsharded — per-slot scatters write at data-dependent positions, and
+    sharding that dim would turn every decode write into a collective."""
+    return _shardings(model.slot_cache_specs(slots, max_len),
+                      model.slot_cache_axes(), mesh)
 
 
 def make_prefill_step(model, mesh, cfg: ServeConfig = ServeConfig()):
@@ -137,34 +171,47 @@ class ServingEngine:
         self.batch, self.max_len = batch, max_len
         self.slots = batch
         self.cfg = cfg
+        self.mesh = mesh
+        #: scheduling stats of the most recent ``run``/``run_wave`` call
+        self.last_stats: dict = {}
         self._sp = None            # lazy pre-sliced slot params
-        # slot scheduling needs the slot-indexed decode path and runs the
-        # unjitted region-replay regime; on a mesh (or for families
-        # without slot support: SSM/hybrid/encdec) fall back to the
-        # pjit'd padded-wave loop
-        self._slot_capable = (mesh is None
-                              and getattr(model, "supports_slots",
-                                          lambda: False)())
-        if mesh is not None:
-            self._prefill = make_prefill_step(model, mesh, cfg)[0]
-            self._decode = make_decode_step(model, mesh, cfg)[0]
-        else:
-            tap = cfg.tapir_config()
+        # slot scheduling runs wherever the family implements the slot
+        # API — including TP meshes, where the slot regions capture under
+        # the ambient mesh and replay their sharding constraints at
+        # lowering.  Only families without slot support (SSM/hybrid/
+        # encdec) use the pjit'd padded-wave loop.
+        self._slot_capable = getattr(model, "supports_slots",
+                                     lambda: False)()
+        # the pjit'd padded-wave steps are only reachable for slot-less
+        # families, so they build lazily on first use — a dense/MoE engine
+        # (mesh or not) never pays for them
+        self._prefill: Optional[Callable] = None
+        self._decode: Optional[Callable] = None
 
-            def _pf(params, tokens, cache):
-                with use(tap):
-                    return model.prefill(params, tokens, cache)
+    def _ensure_padded_steps(self) -> None:
+        if self._prefill is not None:
+            return
+        model, cfg = self.model, self.cfg
+        if self.mesh is not None:
+            self._prefill = make_prefill_step(model, self.mesh, cfg)[0]
+            self._decode = make_decode_step(model, self.mesh, cfg)[0]
+            return
+        tap = cfg.tapir_config()
 
-            def _dc(params, tokens, cache):
-                with use(tap):
-                    logits, cache = model.decode_step(params, tokens, cache)
-                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        def _pf(params, tokens, cache):
+            with use(tap):
+                return model.prefill(params, tokens, cache)
 
-            # donate the cache like the mesh path does: the outer jit owns
-            # the in-place update (the region's inner donation inlines away
-            # under an enclosing jit)
-            self._prefill = jax.jit(_pf, donate_argnums=(2,))
-            self._decode = jax.jit(_dc, donate_argnums=(2,))
+        def _dc(params, tokens, cache):
+            with use(tap):
+                logits, cache = model.decode_step(params, tokens, cache)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # donate the cache like the mesh path does: the outer jit owns
+        # the in-place update (the region's inner donation inlines away
+        # under an enclosing jit)
+        self._prefill = jax.jit(_pf, donate_argnums=(2,))
+        self._decode = jax.jit(_dc, donate_argnums=(2,))
 
     # -- scheduling -------------------------------------------------------
     def run(self, requests: list[Request],
@@ -188,6 +235,24 @@ class ServingEngine:
             return self._run_padded_waves(requests, max_steps)
         return self._run_slots(requests, max_steps, continuous=False)
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context for the slot loop: region programs capture
+        (and key) under it, so sharding constraints resolve and replay."""
+        return jax.set_mesh(self.mesh) if self.mesh is not None \
+            else nullcontext()
+
+    def _init_slot_cache(self):
+        """Fresh slot cache; on a multi-device mesh the pages are placed
+        with their NamedShardings up front so the donated scatter writes
+        alias in place per shard (an unsharded page would reshard on the
+        first constrained write and break the donation)."""
+        cache = self.model.init_slot_cache(self.slots, self.max_len)
+        if self.mesh is not None and getattr(self.mesh, "size", 1) > 1:
+            sh = slot_cache_shardings(self.model, self.mesh, self.slots,
+                                      self.max_len)
+            cache = jax.tree_util.tree_map(jax.device_put, cache, sh)
+        return cache
+
     def _run_slots(self, requests, max_steps: int, continuous: bool):
         from repro.models.layers import bucket_pow2
         model = self.model
@@ -201,8 +266,12 @@ class ServingEngine:
         slot_steps = [0] * self.slots
         tokens = np.zeros((self.slots, 1), np.int32)
         qi = 0
-        with use(self.cfg.tapir_config()):
-            cache = model.init_slot_cache(self.slots, self.max_len)
+        st = {"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
+              "decode_steps": 0}
+        occ_sum = 0.0
+        t0 = time.perf_counter()
+        with self._mesh_ctx(), use(self.cfg.tapir_config()):
+            cache = self._init_slot_cache()
             while qi < len(requests) or any(r is not None for r in slot_req):
                 # -- admission: continuous fills ANY free slot on every
                 # tick; wave only refills once the whole pool drained
@@ -221,6 +290,9 @@ class ServingEngine:
                         # rows while sampling continued — corrupt output,
                         # so reject at admission instead.
                         if plen + r.max_new - 1 > self.max_len:
+                            if self.cfg.admit_policy == "reject":
+                                st["rejected"] += 1
+                                continue
                             raise ValueError(
                                 f"request {r.rid}: prompt ({plen}) + "
                                 f"max_new ({r.max_new}) overflows the "
@@ -233,6 +305,8 @@ class ServingEngine:
                             sp, jnp.asarray(padded), cache, s, plen)
                         tok = int(np.asarray(jnp.argmax(logits, -1))[0])
                         r.out.append(tok)
+                        st["admitted"] += 1
+                        st["tokens"] += 1
                         if len(r.out) >= r.max_new:
                             r.done = True
                             cache["pos"] = cache["pos"].at[s].set(0)
@@ -244,6 +318,8 @@ class ServingEngine:
                     continue    # everyone finished at prefill; admit more
                 # -- one decode step for the WHOLE pool (free slots carry
                 # don't-care tokens; their writes drop / get overwritten)
+                occ_sum += sum(r is not None for r in slot_req) / self.slots
+                st["decode_steps"] += 1
                 logits, cache = model.decode_step_slots(
                     sp, jnp.asarray(tokens), cache)
                 nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
@@ -252,14 +328,25 @@ class ServingEngine:
                         continue
                     tok = int(nxt[s])
                     r.out.append(tok)
+                    st["tokens"] += 1
                     tokens[s, 0] = tok
                     slot_steps[s] += 1
                     if len(r.out) >= r.max_new:
                         r.done = True
                     if r.done or slot_steps[s] >= max_steps:
+                        if not r.done:
+                            st["preempted"] += 1
                         slot_req[s] = None     # out of budget: free, not done
                         cache["pos"] = cache["pos"].at[s].set(0)
+        self._set_stats(st, occ_sum, time.perf_counter() - t0)
         return requests
+
+    def _set_stats(self, st: dict, occ_sum: float, wall_s: float) -> None:
+        st["wall_s"] = wall_s
+        st["tok_per_s"] = st["tokens"] / wall_s if wall_s > 0 else 0.0
+        st["mean_occupancy"] = (occ_sum / st["decode_steps"]
+                                if st["decode_steps"] else 0.0)
+        self.last_stats = st
 
     # -- legacy padded-wave loop (mesh path / families without slots) -----
     def _run_padded_waves(self, requests: list[Request],
@@ -268,9 +355,15 @@ class ServingEngine:
         (prompts left-PADDED to one shared length, i.e. right-aligned —
         pad tokens sit at the sequence start and get attended; the wave
         blocks until its slowest member finishes)."""
+        self._ensure_padded_steps()
+        st = {"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
+              "decode_steps": 0}
+        occ_sum = 0.0
+        t0 = time.perf_counter()
         for wave_start in range(0, len(requests), self.batch):
             wave = requests[wave_start: wave_start + self.batch]
             B = len(wave)
+            st["admitted"] += B
             S = max(len(r.prompt) for r in wave)
             toks = np.zeros((B, S), np.int32)
             for i, r in enumerate(wave):
@@ -281,10 +374,13 @@ class ServingEngine:
                 else logits
             steps = 0
             while not all(r.done for r in wave) and steps < max_steps:
+                occ_sum += sum(not r.done for r in wave) / self.batch
+                st["decode_steps"] += 1
                 nxt_np = np.asarray(nxt)
                 for i, r in enumerate(wave):
                     if not r.done:
                         r.out.append(int(nxt_np[i]))
+                        st["tokens"] += 1
                         if len(r.out) >= r.max_new:
                             r.done = True
                 nxt, cache = self._decode(self.params, nxt[:, None]
@@ -292,4 +388,6 @@ class ServingEngine:
                 if nxt.ndim > 1:
                     nxt = nxt[:, 0]
                 steps += 1
+            st["preempted"] += sum(not r.done for r in wave)
+        self._set_stats(st, occ_sum, time.perf_counter() - t0)
         return requests

@@ -407,6 +407,56 @@ def test_prompt_bucket_clamped_to_page_length():
     assert out.done and len(out.out) == 3
 
 
+def test_last_stats_populated_by_run_and_run_wave():
+    eng = _dense_engine(slots=2)
+    rng = np.random.default_rng(8)
+    reqs = _mixed_requests(rng)
+    out = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                           max_new=r.max_new) for r in reqs])
+    st = eng.last_stats
+    assert st["tokens"] == sum(len(r.out) for r in out)
+    assert st["admitted"] == len(reqs)
+    assert st["rejected"] == 0 and st["preempted"] == 0
+    assert 0.0 < st["mean_occupancy"] <= 1.0
+    assert st["tok_per_s"] > 0 and st["wall_s"] > 0
+    eng.run_wave([Request(rid=r.rid, prompt=r.prompt.copy(),
+                          max_new=r.max_new) for r in reqs])
+    wst = eng.last_stats
+    assert wst is not st and wst["tokens"] == st["tokens"]
+    # wave idles finished slots until the slowest member drains, so its
+    # mean occupancy can't beat continuous on this mixed-length queue
+    assert wst["mean_occupancy"] <= st["mean_occupancy"] + 1e-9
+
+    # a budget preemption shows up in the stats
+    rng = np.random.default_rng(9)
+    eng.run([Request(rid=0,
+                     prompt=rng.integers(1, 100, size=5).astype(np.int32),
+                     max_new=20)], max_steps=4)
+    assert eng.last_stats["preempted"] == 1
+
+
+def test_admit_policy_reject_counts_and_serves_rest():
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch=1, max_len=32,
+                        cfg=ServeConfig(target="cpu",
+                                        admit_policy="reject"))
+    rng = np.random.default_rng(4)
+    bad = Request(rid=0,
+                  prompt=rng.integers(1, 100, size=8).astype(np.int32),
+                  max_new=30)          # 8 + 30 - 1 > 32: overflows
+    ok = Request(rid=1,
+                 prompt=rng.integers(1, 100, size=5).astype(np.int32),
+                 max_new=4)
+    out = eng.run([bad, ok])
+    assert not out[0].done and out[0].out == []
+    assert out[1].done and len(out[1].out) == 4
+    assert eng.last_stats["rejected"] == 1
+    assert eng.last_stats["admitted"] == 1
+
+
 def test_slot_cache_pages_update_in_place_through_engine_steps():
     cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
                               compute_dtype="float32")

@@ -1,37 +1,9 @@
-"""Distribution tests.  These need >1 device, so they run in a subprocess
-with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the flag must be
-set before jax initializes, and the main test process must keep seeing ONE
-device so smoke tests stay honest)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_in_subprocess(body: str) -> dict:
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
-        result = {}
-    """) + textwrap.dedent(body) + "\nprint('RESULT::' + json.dumps(result))\n"
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(_REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=580)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    for line in out.stdout.splitlines():
-        if line.startswith("RESULT::"):
-            return json.loads(line[len("RESULT::"):])
-    raise AssertionError(f"no RESULT:: line in\n{out.stdout[-2000:]}")
+"""Distribution tests.  These need >1 device, so they run through the
+shared 8-device subprocess harness in ``tests/conftest.py`` (the
+XLA_FLAGS device-count override must be set before jax initializes, and
+the main test process must keep seeing ONE device so smoke tests stay
+honest)."""
+from conftest import run_mesh_subprocess as _run_in_subprocess
 
 
 def test_train_step_on_mesh_matches_single_device():

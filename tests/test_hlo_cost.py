@@ -77,14 +77,8 @@ def test_slice_aware_fusion_bytes():
 
 
 def test_collective_bytes_and_classification():
-    import os
-    import subprocess
-    import sys
-    import textwrap
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import jax, jax.numpy as jnp
+    from conftest import run_mesh_subprocess
+    res = run_mesh_subprocess("""
         from functools import partial
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
@@ -101,14 +95,9 @@ def test_collective_bytes_and_classification():
         c = analyze(hlo)
         assert c.coll_counts.get("all-reduce", 0) >= 1, c.coll_counts
         assert c.coll_ici > 0 and c.coll_dcn == 0, (c.coll_ici, c.coll_dcn)
-        print("OK")
+        result["ok"] = True
     """)
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out = subprocess.run([sys.executable, "-c", script],
-                         env=dict(os.environ,
-                                  PYTHONPATH=os.path.join(repo, "src")),
-                         capture_output=True, text=True, timeout=580)
-    assert out.returncode == 0 and "OK" in out.stdout, out.stderr[-2000:]
+    assert res["ok"]
 
 
 def test_shape_bytes_parser():

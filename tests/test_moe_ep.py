@@ -1,33 +1,7 @@
 """Expert-parallel MoE dispatch (the §Perf I2 optimization) must match the
 global dispatch exactly when no token drops, and stay finite under drops.
-Runs in a subprocess with 8 devices (same pattern as test_dist)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(body: str) -> dict:
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json, dataclasses
-        import jax, jax.numpy as jnp
-        import numpy as np
-        result = {}
-    """) + textwrap.dedent(body) + "\nprint('RESULT::' + json.dumps(result))\n"
-    out = subprocess.run([sys.executable, "-c", script],
-                         env=dict(os.environ,
-                                  PYTHONPATH=os.path.join(_REPO, "src")),
-                         capture_output=True, text=True, timeout=580)
-    assert out.returncode == 0, out.stderr[-3000:]
-    for line in out.stdout.splitlines():
-        if line.startswith("RESULT::"):
-            return json.loads(line[len("RESULT::"):])
-    raise AssertionError(out.stdout[-2000:])
+Runs through the shared 8-device subprocess harness (tests/conftest.py)."""
+from conftest import run_mesh_subprocess as _run
 
 
 def test_ep_equals_global_when_no_drops():

@@ -459,13 +459,111 @@ def bench_serve_mesh_vs_single(iters: int = 2, json_path="BENCH_mesh.json"):
     return out
 
 
+# ---------------------------------------------------------------------------
+# serve_fault_vs_clean: recovery overhead under an injected failure (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_fault_vs_clean(iters: int = 3, slots: int = 4,
+                               json_path="BENCH_fault.json"):
+    """Recovery cost of the fault-tolerant serving loop: the standard
+    mixed-length workload run clean vs with ONE injected decode-step crash
+    (periodic slot checkpoints every 16 steps, crash at step 33 — one step
+    past a checkpoint, so recovery is restore + short replay).  Greedy
+    decode replayed from the restored slot state is deterministic, so the
+    gate is twofold: per-request outputs bitwise-identical to the clean
+    run, and wall-clock overhead (checkpoint saves + restore + replay)
+    bounded."""
+    import dataclasses
+    import tempfile
+
+    import repro.configs as C
+    from repro.dist.fault import Fault, ScriptedFaultInjector
+    from repro.models.base import get_model
+    from repro.serve import Request, ServeConfig, ServingEngine
+
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    plens = [6, 4, 7, 5, 6, 3, 7, 4, 6, 5, 4, 7]
+    news = [4, 60, 6, 40, 8, 56, 4, 28, 6, 64, 12, 44]
+    prompts = [rng.integers(1, 100, size=n).astype(np.int32) for n in plens]
+    ckpt_every, crash_step = 16, 33
+
+    def mk():
+        return [Request(rid=i, prompt=p.copy(), max_new=m)
+                for i, (p, m) in enumerate(zip(prompts, news))]
+
+    def faulted_engine():
+        # fresh one-shot injector + fresh checkpoint dir per run: the
+        # crash fires exactly once every run, and no run restores a stale
+        # checkpoint left by the previous one
+        inj = ScriptedFaultInjector({crash_step: Fault("crash")})
+        return ServingEngine(
+            model, params, batch=slots, max_len=128,
+            cfg=ServeConfig(target="cpu", fault_injector=inj,
+                            ckpt_dir=tempfile.mkdtemp(),
+                            ckpt_every=ckpt_every))
+
+    clear_cache()
+    eng = ServingEngine(model, params, batch=slots, max_len=128,
+                        cfg=ServeConfig(target="cpu"))
+    ref = eng.run(mk(), max_steps=4096)      # warmup compiles every program
+    faulted_engine().run(mk(), max_steps=4096)   # warm the recovery path
+
+    results = {}
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = eng.run(mk(), max_steps=4096)
+    t = (time.perf_counter() - t0) / iters
+    toks = sum(len(r.out) for r in out)
+    results["clean"] = {"wall_s": t, "tokens": toks, "tok_per_s": toks / t,
+                        "bitwise_match": True}
+
+    bitwise, fstats = True, {}
+    t_sum = 0.0
+    for _ in range(iters):
+        feng = faulted_engine()
+        t0 = time.perf_counter()
+        out = feng.run(mk(), max_steps=4096)
+        t_sum += time.perf_counter() - t0
+        bitwise = bitwise and all(a.out == b.out and a.done and b.done
+                                  for a, b in zip(ref, out))
+        fstats = {k: int(feng.last_stats[k]) for k in
+                  ("failures", "restores", "checkpoints")}
+    t = t_sum / iters
+    toks = sum(len(r.out) for r in out)
+    results["faulted"] = {"wall_s": t, "tokens": toks,
+                          "tok_per_s": toks / t, "bitwise_match": bitwise}
+    overhead = results["faulted"]["wall_s"] / results["clean"]["wall_s"] - 1.0
+    for label in ("clean", "faulted"):
+        r = results[label]
+        print(f"serve_fault_vs_clean {label:8s} {r['wall_s']*1e3:9.1f} ms "
+              f"({r['tokens']} tokens, {r['tok_per_s']:8.1f} tok/s)")
+    print(f"serve_fault_vs_clean recovery overhead: {overhead*100:.1f}% "
+          f"(bitwise={bitwise}, {fstats})")
+    out = {"clean": results["clean"], "faulted": results["faulted"],
+           "overhead": overhead, "bitwise_match": bitwise,
+           "fault_stats": fstats,
+           "config": {"slots": slots, "requests": len(news),
+                      "ckpt_every": ckpt_every, "crash_step": crash_step,
+                      "max_new": news, "prompt_lens": plens}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
                     choices=["all", "region_vs_per_op",
                              "decode_region_vs_per_op",
                              "serve_continuous_vs_wave",
-                             "serve_mesh_vs_single"])
+                             "serve_mesh_vs_single",
+                             "serve_fault_vs_clean"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -485,6 +583,10 @@ def main():
     if args.case == "serve_mesh_vs_single":
         bench_serve_mesh_vs_single(iters=args.iters,
                                    json_path=args.json or "BENCH_mesh.json")
+        return
+    if args.case == "serve_fault_vs_clean":
+        bench_serve_fault_vs_clean(iters=args.iters,
+                                   json_path=args.json or "BENCH_fault.json")
         return
 
     key = jax.random.PRNGKey(0)

@@ -22,17 +22,21 @@ import numpy as np
 
 def check(out_dir: str, min_region_speedup: float = 1.5,
           min_decode_speedup: float = 1.3,
-          min_serve_speedup: float = 1.3) -> int:
+          min_serve_speedup: float = 1.3,
+          max_fault_overhead: float = 0.25) -> int:
     """Perf regression gate: run the two region benchmarks, the
-    continuous-batching benchmark and the mesh-serving benchmark, and
-    FAIL (non-zero exit) if region_vs_per_op drops below
-    ``min_region_speedup``, decode_region_vs_per_op below
-    ``min_decode_speedup``, serve_continuous_vs_wave below
-    ``min_serve_speedup``, any of them loses bitwise-match / stops
-    donating cache buffers, or mesh slot serving stops matching the
-    single-device engine bitwise (serve_mesh_vs_single is
-    correctness-gated only — emulated host devices are not a perf
-    proxy)."""
+    continuous-batching benchmark, the mesh-serving benchmark and the
+    fault-recovery benchmark, and FAIL (non-zero exit) if
+    region_vs_per_op drops below ``min_region_speedup``,
+    decode_region_vs_per_op below ``min_decode_speedup``,
+    serve_continuous_vs_wave below ``min_serve_speedup``, any of them
+    loses bitwise-match / stops donating cache buffers, mesh slot
+    serving stops matching the single-device engine bitwise
+    (serve_mesh_vs_single is correctness-gated only — emulated host
+    devices are not a perf proxy), or serve_fault_vs_clean loses
+    bitwise per-request equality between the faulted and clean runs /
+    its recovery overhead exceeds ``max_fault_overhead`` wall-clock
+    with one injected failure."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -43,6 +47,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_serve.json"))
     mv = kernel_bench.bench_serve_mesh_vs_single(
         json_path=os.path.join(out_dir, "BENCH_mesh.json"))
+    fv = kernel_bench.bench_serve_fault_vs_clean(
+        json_path=os.path.join(out_dir, "BENCH_fault.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -72,6 +78,17 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     if not mv["mesh_annotated_nodes"]:
         failures.append("mesh slot programs carry no sharding annotations "
                         "(constraints dropped by the tracer again)")
+    if not fv["bitwise_match"]:
+        failures.append("faulted serving run no longer bitwise-matches the "
+                        "clean run per request (recovery replay broke "
+                        "determinism)")
+    if fv["fault_stats"].get("failures") != 1 \
+            or fv["fault_stats"].get("restores") != 1:
+        failures.append(f"fault benchmark expected exactly 1 injected "
+                        f"failure + 1 restore, got {fv['fault_stats']}")
+    if fv["overhead"] >= max_fault_overhead:
+        failures.append(f"fault recovery overhead {fv['overhead']*100:.1f}% "
+                        f">= {max_fault_overhead*100:.0f}% wall-clock")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -80,7 +97,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     print(f"CHECK OK: region {rv['speedup']:.2f}x, "
           f"decode {dv['speedup']:.2f}x, "
           f"serve {sv['speedup']:.2f}x, mesh bitwise "
-          f"({mv['mesh_annotated_nodes']} sharded nodes), donated")
+          f"({mv['mesh_annotated_nodes']} sharded nodes), fault recovery "
+          f"{fv['overhead']*100:+.1f}% bitwise, donated")
     return 0
 
 

@@ -51,25 +51,53 @@ def _unflatten_into(template, flat: dict):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state, *, host_id: int = 0,
-                    keep_n: int = 3, blocking: bool = True,
-                    meta: Optional[dict] = None) -> threading.Thread | None:
-    """Write ``state`` (a pytree of arrays) for ``step``."""
+                    n_hosts: int = 1, keep_n: int = 3, blocking: bool = True,
+                    meta: Optional[dict] = None,
+                    barrier_timeout_s: float = 120.0
+                    ) -> threading.Thread | None:
+    """Write ``state`` (a pytree of arrays) for ``step``.
+
+    Multi-host commit is SINGLE-WRITER: every host stages its shard into
+    the one shared ``step_..._tmp`` directory and drops a ``done_<host>``
+    barrier file; only host 0 — after observing all ``n_hosts`` barriers —
+    writes the manifest and renames tmp -> final.  (The old per-host
+    ``_tmp{host_id}`` staging let two hosts race rmtree+rename onto the
+    same final dir, each clobbering the other's committed shard.)"""
     flat = _flatten(state)
     # snapshot to host memory first (cheap on CPU; on TPU this is the D2H)
     host_flat = {k: np.asarray(v) for k, v in flat.items()}
 
     def write():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
-        tmp = final + f"_tmp{host_id}"
+        tmp = final + "_tmp"                    # shared staging dir
         os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"host_{host_id:05d}.npz"), **host_flat)
+        barrier = os.path.join(tmp, f"done_{host_id:05d}")
+        with open(barrier, "w") as f:
+            f.write("ok")
+        if host_id != 0:
+            return                              # host 0 commits
+        deadline = time.monotonic() + barrier_timeout_s
+        while True:
+            present = [h for h in range(n_hosts) if os.path.exists(
+                os.path.join(tmp, f"done_{h:05d}"))]
+            if len(present) == n_hosts:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"checkpoint step {step}: {len(present)}/{n_hosts} "
+                    "hosts reached the commit barrier")
+            time.sleep(0.01)
         manifest = {
             "step": step,
             "time": time.time(),
+            "n_hosts": n_hosts,
             "meta": meta or {},
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in host_flat.items()},
         }
-        np.savez(os.path.join(tmp, f"host_{host_id:05d}.npz"), **host_flat)
+        for h in range(n_hosts):
+            os.remove(os.path.join(tmp, f"done_{h:05d}"))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -122,7 +150,15 @@ def restore_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(d, f"host_{host_id:05d}.npz"))
-    flat = {k: data[k] for k in data.files}
+    flat = {}
+    for k in data.files:
+        arr = data[k]
+        want = manifest["leaves"].get(k, {}).get("dtype")
+        if arr.dtype.kind == "V" and want:
+            # extension dtypes (bfloat16, float8_*) survive np.savez as
+            # raw void bytes; view them back to the manifest's dtype
+            arr = arr.view(np.dtype(getattr(jax.numpy, want, want)))
+        flat[k] = arr
     state = _unflatten_into(template, flat)
     if shardings is not None:
         state = jax.tree_util.tree_map(jax.device_put, state, shardings)
@@ -133,11 +169,13 @@ class CheckpointManager:
     """keep-N manager with async save and restore-latest."""
 
     def __init__(self, ckpt_dir: str, keep_n: int = 3, every: int = 100,
-                 async_save: bool = True, host_id: int = 0):
+                 async_save: bool = True, host_id: int = 0,
+                 n_hosts: int = 1):
         self.dir = ckpt_dir
         self.keep_n, self.every = keep_n, every
         self.async_save = async_save
         self.host_id = host_id
+        self.n_hosts = n_hosts
         self._pending: Optional[threading.Thread] = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
@@ -147,7 +185,8 @@ class CheckpointManager:
             return False
         self.wait()
         self._pending = save_checkpoint(
-            self.dir, step, state, host_id=self.host_id, keep_n=self.keep_n,
+            self.dir, step, state, host_id=self.host_id,
+            n_hosts=self.n_hosts, keep_n=self.keep_n,
             blocking=not self.async_save, meta=meta)
         return True
 

@@ -1484,3 +1484,19 @@ def clear_cache() -> None:
     _GRAPHS.clear()
     _PROGRAMS.clear()
     _CACHE_STATS.update(hits=0, misses=0, pipeline_s=0.0)
+
+
+def invalidate_mesh(fingerprint: tuple) -> int:
+    """Drop every cached program/graph compiled under ``fingerprint``.
+
+    All three caches' keys end with ``mesh_fingerprint()`` (it is the last
+    component of ``_cfg_key``), so a mesh that left the job — a host
+    evicted mid-serve — can be purged without touching programs compiled
+    for other meshes.  Returns the number of evicted entries."""
+    n = 0
+    for cache in (_CACHE, _GRAPHS, _PROGRAMS):
+        dead = [k for k in cache if k and k[-1] == fingerprint]
+        for k in dead:
+            del cache[k]
+        n += len(dead)
+    return n

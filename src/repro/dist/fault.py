@@ -1,4 +1,5 @@
-"""Fault tolerance: checkpoint-replay training loop + straggler detection.
+"""Fault tolerance: checkpoint-replay training loop, straggler detection,
+and deterministic fault injection for the serving engine.
 
 ``FaultTolerantLoop`` wraps a jitted step function with the restore-and-
 replay protocol: on a (detected or injected) failure it restores the
@@ -9,7 +10,16 @@ give up after ``max_retries`` attempts.
 
 ``StragglerWatchdog`` keeps a rolling window of step durations and flags
 steps slower than ``threshold`` x the median — the host-side signal a
-production deployment uses to evict slow workers.
+production deployment uses to evict slow workers.  It runs in BOTH the
+training loop and the serving hot loop (``ServingEngine`` feeds each
+decode step's duration and exports p50/p95/straggler counts through
+``last_stats``).
+
+``Fault`` / ``FaultInjector`` / ``ScriptedFaultInjector`` make every
+serving failure mode a reproducible test: a fault fires at a
+deterministic decode step (optionally attributed to a mesh host or a
+slot), and the engine's recovery loop — checkpoint, mesh shrink,
+restore, re-admission — replays identically run over run.
 """
 from __future__ import annotations
 
@@ -19,6 +29,71 @@ from typing import Callable, Optional
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# Deterministic fault injection (serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One injected failure event.
+
+    kind:
+      "host"     — a mesh host died: the engine checkpoints are stale, the
+                   run restores the latest slot checkpoint on a mesh
+                   REBUILT without ``host`` (device id) and recompiles.
+      "crash"    — the decode step failed without losing a device (OOM,
+                   preempted worker that comes back): restore + replay on
+                   the SAME mesh, no recompile.
+      "straggle" — the step completes but ``delay_s`` slower: feeds the
+                   watchdog/admission-shedding path instead of raising.
+
+    ``host`` attributes the fault to a device id (used by the mesh-shrink
+    path and by straggle escalation); ``slot`` optionally attributes it to
+    a slot for bookkeeping — per-slot compute never mixes rows, so slot
+    attribution does not change recovery, only stats."""
+    kind: str                    # "host" | "crash" | "straggle"
+    host: Optional[int] = None   # device id to evict (mesh shrink)
+    slot: Optional[int] = None   # slot attribution (stats only)
+    delay_s: float = 0.0         # straggle: added step latency
+
+
+class FaultInjector:
+    """Protocol: the engine calls ``on_decode_step(step)`` before every
+    pool-wide decode step and acts on the returned :class:`Fault` (or
+    None).  Implementations must be deterministic in ``step`` so failure
+    runs are reproducible tests."""
+
+    def on_decode_step(self, step: int) -> Optional[Fault]:
+        raise NotImplementedError
+
+
+class ScriptedFaultInjector(FaultInjector):
+    """Deterministic script: ``faults`` maps a decode-step index to the
+    :class:`Fault` that fires there.  "host"/"crash" faults fire ONCE
+    (after recovery the replayed step must succeed, like a real dead host
+    that was evicted); "straggle" faults fire at every step in
+    ``[step, step + repeat)`` — sustained straggle is what the shedding /
+    escalation policy reacts to."""
+
+    def __init__(self, faults: dict[int, Fault], repeat: int = 1):
+        self.faults = dict(faults)
+        self.repeat = repeat
+        self.fired: list[tuple[int, Fault]] = []
+
+    def on_decode_step(self, step: int) -> Optional[Fault]:
+        f = self.faults.get(step)
+        if f is not None and f.kind != "straggle":
+            del self.faults[step]          # one-shot
+            self.fired.append((step, f))
+            return f
+        for start, g in self.faults.items():
+            if g.kind == "straggle" and start <= step < start + self.repeat:
+                self.fired.append((step, g))
+                return g
+        return None
+
+
 @dataclass
 class LoopStats:
     steps_run: int = 0
@@ -26,6 +101,20 @@ class LoopStats:
     restores: int = 0
     losses: list = field(default_factory=list)
     straggler_steps: list = field(default_factory=list)
+    #: step index -> position in ``losses`` (replay dedupe)
+    _loss_index: dict = field(default_factory=dict, repr=False)
+
+    def record_loss(self, step: int, value: float) -> None:
+        """Record ``value`` as THE loss of ``step``.  A step replayed
+        after a restore overwrites its previous entry instead of
+        appending — ``losses`` stays one-entry-per-step (a clean loss
+        curve) instead of growing with duplicates on every recovery."""
+        i = self._loss_index.get(step)
+        if i is None:
+            self._loss_index[step] = len(self.losses)
+            self.losses.append(value)
+        else:
+            self.losses[i] = value
 
 
 class FaultTolerantLoop:
@@ -61,7 +150,7 @@ class FaultTolerantLoop:
             t0 = time.perf_counter()
             state, metrics = self.step_fn(state, batch)
             if "loss" in metrics:
-                stats.losses.append(float(metrics["loss"]))
+                stats.record_loss(step, float(metrics["loss"]))
             if self.watchdog.observe(step, time.perf_counter() - t0):
                 stats.straggler_steps.append(step)
             stats.steps_run += 1

@@ -39,3 +39,37 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     if pod:
         return _make_mesh((pod, data, model), ("pod", "data", "model"))
     return _make_mesh((data, model), ("data", "model"))
+
+
+def shrink_mesh(mesh, failed_device_id: int):
+    """Rebuild ``mesh`` without the slice of devices containing
+    ``failed_device_id``.
+
+    The failed device's row is dropped along the outermost shrinkable
+    axis — ``pod`` if present and >1, else ``data`` — which preserves the
+    ``model`` axis size, so every TP-sharded dimension keeps dividing and
+    existing NamedSharding specs stay valid on the new mesh.  Raises if
+    the device is not in the mesh or no data-parallel axis can shrink
+    (a pure-TP mesh cannot lose a device and keep the layout)."""
+    import numpy as np
+
+    devs = np.asarray(mesh.devices)
+    ids = np.vectorize(lambda d: d.id)(devs)
+    pos = np.argwhere(ids == failed_device_id)
+    if pos.size == 0:
+        raise ValueError(
+            f"device {failed_device_id} not in mesh {mesh.axis_names}")
+    axis_names = tuple(mesh.axis_names)
+    for ax, name in enumerate(axis_names):
+        if name != "model" and devs.shape[ax] > 1:
+            keep = [i for i in range(devs.shape[ax]) if i != pos[0][ax]]
+            new_devs = np.take(devs, keep, axis=ax)
+            Mesh = jax.sharding.Mesh
+            if hasattr(jax.sharding, "AxisType") and hasattr(
+                    mesh, "axis_types") and mesh.axis_types is not None:
+                return Mesh(new_devs, axis_names,
+                            axis_types=mesh.axis_types)
+            return Mesh(new_devs, axis_names)
+    raise ValueError(
+        f"mesh {dict(zip(axis_names, devs.shape))} has no shrinkable "
+        "data axis; cannot evict a device without breaking TP layout")

@@ -171,6 +171,15 @@ class BaseModel:
         — the continuous-batching path of ``ServingEngine``."""
         return False
 
+    def slot_param_axes(self) -> dict:
+        """Logical sharding axes mirroring ``slot_params``' structure
+        leaf-for-leaf (per-layer entries carry the stacked block axes with
+        the leading "layers" axis dropped).  Used by ``ServingEngine`` to
+        ``device_put``-pin the TP layout once instead of letting GSPMD
+        re-shard per program."""
+        raise NotImplementedError(
+            f"{self.cfg.family} has no slot-paged serving path")
+
     def cache_len(self, seq_len: int, kind: str) -> int:
         """KV-cache capacity needed to serve ``seq_len`` tokens (vlm adds
         its image-token prefix)."""

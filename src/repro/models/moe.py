@@ -403,6 +403,20 @@ class MoELM(DenseLM):
                                    for k, v in blocks["moe"].items()}))
         return layers
 
+    def slot_param_axes(self) -> dict:
+        cfg = self.cfg
+        base = super().slot_param_axes()
+        dense = {k: tuple(s.axes[1:])
+                 for k, s in _block_specs(cfg, 1).items()}
+        moe = {k: tuple(s.axes[1:])
+               for k, s in _moe_block_specs(cfg, 1).items()}
+        layers = [("dense", dict(dense))
+                  for _ in range(cfg.first_dense_layers)]
+        layers += [("moe", dict(moe))
+                   for _ in range(cfg.n_layers - cfg.first_dense_layers)]
+        base["layers"] = layers
+        return base
+
     def _slot_moe_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
         """MoE decode block over the slot page: attention, per-slot cache
         scatter AND the routed expert FFN in ONE region."""

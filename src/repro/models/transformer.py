@@ -307,6 +307,14 @@ class DenseLM(BaseModel):
                  {k: v[i].astype(cdt) for k, v in params["blocks"].items()})
                 for i in range(self.cfg.n_layers)]
 
+    def slot_param_axes(self) -> dict:
+        blocks = {k: tuple(s.axes[1:])
+                  for k, s in _block_specs(self.cfg, self.cfg.n_layers).items()}
+        return {"layers": [("dense", dict(blocks))
+                           for _ in range(self.cfg.n_layers)],
+                "head": {"ln_f": ("embed",), "w": ("embed", "vocab")},
+                "embed": ("vocab", "embed")}
+
     def _rope_frac(self) -> float:
         return 0.5 if self.cfg.rope == "half" else 1.0
 

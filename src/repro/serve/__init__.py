@@ -1,7 +1,7 @@
 from .engine import (ServeConfig, make_prefill_step, make_decode_step,
-                     cache_shardings, slot_cache_shardings, Request,
-                     ServingEngine)
+                     cache_shardings, slot_cache_shardings,
+                     pin_slot_params, Request, ServingEngine)
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_decode_step",
-           "cache_shardings", "slot_cache_shardings", "Request",
-           "ServingEngine"]
+           "cache_shardings", "slot_cache_shardings", "pin_slot_params",
+           "Request", "ServingEngine"]

@@ -57,8 +57,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
 from repro.core.schedule import CPU_COST_MODEL, CostModel
-from repro.core.tapir import TapirConfig, use
+from repro.core.tapir import TapirConfig, invalidate_mesh, use
+from repro.dist.fault import Fault, FaultInjector, StragglerWatchdog
 from repro.dist.sharding import (batch_pspec, logical_to_pspec,
                                  param_shardings)
 
@@ -82,6 +84,27 @@ class ServeConfig:
     # done=False, counts it in ``last_stats["rejected"]`` and serves the
     # rest of the queue.
     admit_policy: str = "strict"
+    # -- fault tolerance (slot path; see ``_run_slots``) ------------------
+    #: deterministic fault source, consulted before every pool decode step
+    fault_injector: Optional[FaultInjector] = None
+    #: slot-state checkpoints (KV pages, per-slot pos, queue, RNG) land
+    #: here; None disables durability — recovery replays from scratch
+    ckpt_dir: Optional[str] = None
+    #: decode steps between periodic checkpoints (0 = on-demand only)
+    ckpt_every: int = 0
+    #: recoveries before the run gives up (persistent-failure backstop)
+    max_failures: int = 8
+    #: watchdog: a step slower than threshold x rolling median is flagged
+    straggler_threshold: float = 4.0
+    #: consecutive flagged steps before admission sheds load
+    straggle_patience: int = 3
+    #: shed pause starts at shed_base decode ticks and doubles per round
+    #: (bounded exponential backoff) up to shed_cap
+    shed_base: int = 2
+    shed_cap: int = 16
+    #: shed rounds with straggle persisting before the suspect host is
+    #: evicted (checkpoint -> mesh shrink -> restore)
+    straggle_escalate: int = 3
 
     def tapir_config(self) -> TapirConfig:
         cm = CostModel() if self.target == "tpu" else CPU_COST_MODEL
@@ -121,6 +144,62 @@ def slot_cache_shardings(model, mesh, slots: int, max_len: int):
     sharding that dim would turn every decode write into a collective."""
     return _shardings(model.slot_cache_specs(slots, max_len),
                       model.slot_cache_axes(), mesh)
+
+
+def pin_slot_params(model, sp, mesh):
+    """``device_put`` the ``slot_params`` tree with its decode TP layout
+    committed up front, instead of GSPMD re-deciding a layout per program.
+
+    Only a leaf's LAST dim is sharded, and only when its logical axis maps
+    to ``model`` and divides: the GEMM *N* dims (wq/wk/wv/wg/wu/lm head —
+    column sharding, every output element reduced locally) pin to the
+    model axis, while *K*-dim-mapped weights (wo, wd: "heads"/"mlp" on the
+    contraction dim) stay replicated — a K split would all-reduce partial
+    sums and reorder float adds, breaking the bitwise serving invariant."""
+    axes = model.slot_param_axes()
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+
+    def one(ax, v):
+        if not hasattr(v, "shape"):
+            return v                     # ("dense"/"moe") kind markers
+        last = (None,) * (len(ax) - 1) + (ax[-1],) if ax else ()
+        spec = logical_to_pspec(last, mesh, shape=v.shape)
+        spec = tuple(s if s == "model" else None for s in spec)
+        return jax.device_put(v, NamedSharding(mesh, P(*spec)))
+
+    return jax.tree_util.tree_map(one, axes, sp, is_leaf=is_axes)
+
+
+class _EngineFault(Exception):
+    """Internal: aborts the slot session; carries the injected Fault."""
+
+    def __init__(self, fault: Fault):
+        super().__init__(f"injected fault: {fault}")
+        self.fault = fault
+
+
+@dataclass
+class _SlotRunState:
+    """Everything a slot session needs to resume: the device state
+    (``cache`` pages + ``rng``) checkpoints as one pytree; the host-side
+    scheduler fields travel in the checkpoint's JSON ``meta``.  All of it
+    rolls back together on restore, so replay is deterministic."""
+    cache: Any
+    rng: Any
+    slot_idx: list               # per-slot index into ``requests``, -1 free
+    slot_steps: list             # per-slot decode-step budget used
+    tokens: np.ndarray           # [slots, 1] next feed token per slot
+    qi: int = 0                  # queue cursor
+    step: int = 0                # completed pool-wide decode steps
+    occ_sum: float = 0.0
+    st: dict = field(default_factory=dict)
+    backoff: int = 0             # admission pause ticks remaining (shed)
+    shed_rounds: int = 0
+    straggle_run: int = 0        # consecutive flagged steps
+    suspect: Optional[int] = None  # device id blamed for the straggle
 
 
 def make_prefill_step(model, mesh, cfg: ServeConfig = ServeConfig()):
@@ -253,93 +332,279 @@ class ServingEngine:
             cache = jax.tree_util.tree_map(jax.device_put, cache, sh)
         return cache
 
+    # -- fault-tolerant slot loop -----------------------------------------
+    def _mesh_fp(self) -> tuple:
+        """Structural fingerprint of ``self.mesh`` (same shape as
+        ``passes.mesh_fingerprint()``, but of an explicit mesh)."""
+        m = self.mesh
+        if m is None:
+            return ()
+        shape = m.shape
+        return tuple((a, int(shape[a])) for a in m.axis_names)
+
+    def _build_slot_params(self):
+        sp = self.model.slot_params(self.params)
+        if self.mesh is not None and getattr(self.mesh, "size", 1) > 1:
+            sp = pin_slot_params(self.model, sp, self.mesh)
+        return sp
+
+    def _slot_state_template(self):
+        """ShapeDtypeStruct pytree of the checkpointable device state."""
+        return {"cache": self.model.slot_cache_specs(self.slots,
+                                                     self.max_len),
+                "rng": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+
+    def _slot_state_shardings(self):
+        if self.mesh is None or getattr(self.mesh, "size", 1) <= 1:
+            return None
+        return {"cache": slot_cache_shardings(self.model, self.mesh,
+                                              self.slots, self.max_len),
+                "rng": NamedSharding(self.mesh, P())}
+
+    def _fresh_slot_state(self, requests) -> _SlotRunState:
+        for r in requests:
+            r.out, r.done = [], False
+        return _SlotRunState(
+            cache=self._init_slot_cache(),
+            # greedy today; checkpointed so a sampler slots into the same
+            # recovery protocol without changing the state schema
+            rng=jax.random.PRNGKey(0),
+            slot_idx=[-1] * self.slots,
+            slot_steps=[0] * self.slots,
+            tokens=np.zeros((self.slots, 1), np.int32),
+            st={"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
+                "decode_steps": 0})
+
+    def _save_slot_ckpt(self, rs: _SlotRunState, requests, ft: dict) -> None:
+        """One atomic snapshot: KV pages + per-slot pos + RNG as the device
+        pytree; queue cursor, slot assignments, feed tokens, every
+        admitted request's progress and the rolled-back stats as JSON
+        meta.  Restore rewinds ALL of it together, so replay from the
+        checkpoint is deterministic."""
+        if self.cfg.ckpt_dir is None:
+            return
+        meta = {"qi": rs.qi, "step": rs.step,
+                "slot_idx": [int(i) for i in rs.slot_idx],
+                "slot_steps": [int(s) for s in rs.slot_steps],
+                "tokens": [int(t) for t in rs.tokens[:, 0]],
+                "outs": {str(i): [int(t) for t in requests[i].out]
+                         for i in range(rs.qi)},
+                "done": [i for i in range(rs.qi) if requests[i].done],
+                "st": {k: int(v) for k, v in rs.st.items()},
+                "occ_sum": float(rs.occ_sum)}
+        save_checkpoint(self.cfg.ckpt_dir, rs.step,
+                        {"cache": rs.cache, "rng": rs.rng},
+                        keep_n=2, blocking=True, meta=meta)
+        ft["checkpoints"] += 1
+
+    def _restore_slot_state(self, requests, ft: dict) -> _SlotRunState:
+        """Latest slot checkpoint -> run state, loaded through the elastic
+        ``shardings=`` path (the CURRENT mesh's shardings — after a shrink
+        this is the reshard-on-load).  No checkpoint: full reset; greedy
+        decode is deterministic, so replay from scratch still converges to
+        the clean run's outputs."""
+        ft["restores"] += 1
+        if self.cfg.ckpt_dir is not None:
+            try:
+                state, _, manifest = restore_checkpoint(
+                    self.cfg.ckpt_dir, self._slot_state_template(),
+                    shardings=self._slot_state_shardings())
+            except FileNotFoundError:
+                return self._fresh_slot_state(requests)
+            if self._slot_state_shardings() is None:
+                state = jax.tree_util.tree_map(jnp.asarray, state)
+            meta = manifest["meta"]
+            done = set(meta["done"])
+            for i, r in enumerate(requests):
+                out = meta["outs"].get(str(i))
+                r.out = list(out) if out is not None else []
+                r.done = i in done
+            return _SlotRunState(
+                cache=state["cache"], rng=state["rng"],
+                slot_idx=list(meta["slot_idx"]),
+                slot_steps=list(meta["slot_steps"]),
+                tokens=np.asarray(meta["tokens"], np.int32).reshape(-1, 1),
+                qi=int(meta["qi"]), step=int(meta["step"]),
+                occ_sum=float(meta["occ_sum"]), st=dict(meta["st"]))
+        return self._fresh_slot_state(requests)
+
+    def _handle_fault(self, fault: Fault, ft: dict) -> None:
+        """Post-mortem reconfiguration: a fault blaming a mesh host evicts
+        it (shrunk mesh -> new shardings -> ``_cfg_key`` miss -> clean
+        recompile); the dead fingerprint's programs are purged so nothing
+        stale can replay.  A crash without a blamed host restores on the
+        same mesh — programs and pinned params survive, so replay is a
+        cache hit."""
+        old_fp = self._mesh_fp()
+        if fault.host is not None and self.mesh is not None:
+            from repro.launch.mesh import shrink_mesh
+            try:
+                new_mesh = shrink_mesh(self.mesh, fault.host)
+            except ValueError:
+                new_mesh = None     # not in mesh / pure TP: same-mesh retry
+            if new_mesh is not None:
+                self.mesh = new_mesh
+                ft["mesh_shrinks"] += 1
+        if self._mesh_fp() != old_fp:
+            invalidate_mesh(old_fp)
+            self._sp = None         # re-pin params on the new mesh
+
     def _run_slots(self, requests, max_steps: int, continuous: bool):
-        from repro.models.layers import bucket_pow2
-        model = self.model
-        if self._sp is None:
-            self._sp = model.slot_params(self.params)
-        sp = self._sp
-        slot_req: list[Optional[Request]] = [None] * self.slots
-        # per-slot decode-step counter: ``max_steps`` caps each REQUEST's
-        # decode budget (the wave loop's per-wave semantics), not the
-        # whole call — a long queue must not starve late admits
-        slot_steps = [0] * self.slots
-        tokens = np.zeros((self.slots, 1), np.int32)
-        qi = 0
-        st = {"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
-              "decode_steps": 0}
-        occ_sum = 0.0
+        """Recovery loop around the slot session: a session runs until an
+        injected (or escalated) fault aborts it; the handler reconfigures
+        the mesh, the next attempt restores the latest checkpoint and
+        replays.  Per-request outputs stay bitwise identical to a no-fault
+        run — everything the session consumes (pages, pos, queue, feed
+        tokens, request progress) rolls back to one consistent snapshot
+        and greedy decode is deterministic."""
+        cfg = self.cfg
+        wd = StragglerWatchdog(threshold=cfg.straggler_threshold)
+        ft = {"failures": 0, "restores": 0, "mesh_shrinks": 0,
+              "checkpoints": 0, "shed_steps": 0, "shed_rounds": 0}
         t0 = time.perf_counter()
-        with self._mesh_ctx(), use(self.cfg.tapir_config()):
-            cache = self._init_slot_cache()
-            while qi < len(requests) or any(r is not None for r in slot_req):
-                # -- admission: continuous fills ANY free slot on every
-                # tick; wave only refills once the whole pool drained
-                if continuous or all(r is None for r in slot_req):
-                    for s in range(self.slots):
-                        if qi >= len(requests):
-                            break
-                        if slot_req[s] is not None:
-                            continue
-                        r = requests[qi]
-                        qi += 1
-                        plen = len(r.prompt)
-                        # the slot page must hold every position a decode
-                        # step will write: rows [0, plen + max_new - 1).
-                        # Past capacity the scatter would DROP new K/V
-                        # rows while sampling continued — corrupt output,
-                        # so reject at admission instead.
-                        if plen + r.max_new - 1 > self.max_len:
-                            if self.cfg.admit_policy == "reject":
-                                st["rejected"] += 1
-                                continue
-                            raise ValueError(
-                                f"request {r.rid}: prompt ({plen}) + "
-                                f"max_new ({r.max_new}) overflows the "
-                                f"slot page (max_len={self.max_len})")
-                        padded = np.zeros(
-                            (1, min(bucket_pow2(plen), self.max_len)),
-                            np.int32)
-                        padded[0, :plen] = np.asarray(r.prompt)
-                        logits, cache = model.prefill_into_slot(
-                            sp, jnp.asarray(padded), cache, s, plen)
-                        tok = int(np.asarray(jnp.argmax(logits, -1))[0])
-                        r.out.append(tok)
-                        st["admitted"] += 1
-                        st["tokens"] += 1
-                        if len(r.out) >= r.max_new:
-                            r.done = True
-                            cache["pos"] = cache["pos"].at[s].set(0)
-                        else:
-                            slot_req[s] = r
-                            slot_steps[s] = 0
-                            tokens[s, 0] = tok
-                if not any(r is not None for r in slot_req):
-                    continue    # everyone finished at prefill; admit more
-                # -- one decode step for the WHOLE pool (free slots carry
-                # don't-care tokens; their writes drop / get overwritten)
-                occ_sum += sum(r is not None for r in slot_req) / self.slots
-                st["decode_steps"] += 1
-                logits, cache = model.decode_step_slots(
-                    sp, jnp.asarray(tokens), cache)
-                nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
-                for s, r in enumerate(slot_req):
-                    if r is None:
+        resume = False
+        while True:
+            try:
+                with self._mesh_ctx(), use(cfg.tapir_config()):
+                    if self._sp is None:
+                        self._sp = self._build_slot_params()
+                    rs = self._restore_slot_state(requests, ft) if resume \
+                        else self._fresh_slot_state(requests)
+                    self._slot_session(requests, max_steps, continuous,
+                                       rs, ft, wd)
+                break
+            except _EngineFault as ef:
+                ft["failures"] += 1
+                if ft["failures"] > cfg.max_failures:
+                    raise RuntimeError(
+                        f"slot serving failed {ft['failures']} times; "
+                        "giving up") from ef
+                self._handle_fault(ef.fault, ft)
+                resume = True
+        st = rs.st
+        st.update(ft, straggler_steps=len(wd.flagged),
+                  step_p50=wd.p50, step_p95=wd.p95)
+        self._set_stats(st, rs.occ_sum, time.perf_counter() - t0)
+        return requests
+
+    def _slot_session(self, requests, max_steps: int, continuous: bool,
+                      rs: _SlotRunState, ft: dict,
+                      wd: StragglerWatchdog) -> None:
+        from repro.models.layers import bucket_pow2
+        model, cfg = self.model, self.cfg
+        sp = self._sp
+        injector = cfg.fault_injector
+        slot_req: list[Optional[Request]] = [
+            requests[i] if i >= 0 else None for i in rs.slot_idx]
+        while rs.qi < len(requests) or any(r is not None for r in slot_req):
+            if rs.backoff > 0:
+                # shedding: admission paused, existing slots keep draining
+                rs.backoff -= 1
+                ft["shed_steps"] += 1
+            # -- admission: continuous fills ANY free slot on every
+            # tick; wave only refills once the whole pool drained
+            elif continuous or all(r is None for r in slot_req):
+                for s in range(self.slots):
+                    if rs.qi >= len(requests):
+                        break
+                    if slot_req[s] is not None:
                         continue
-                    tok = int(nxt[s])
+                    idx = rs.qi
+                    r = requests[idx]
+                    rs.qi += 1
+                    plen = len(r.prompt)
+                    # the slot page must hold every position a decode
+                    # step will write: rows [0, plen + max_new - 1).
+                    # Past capacity the scatter would DROP new K/V
+                    # rows while sampling continued — corrupt output,
+                    # so reject at admission instead.
+                    if plen + r.max_new - 1 > self.max_len:
+                        if cfg.admit_policy == "reject":
+                            rs.st["rejected"] += 1
+                            continue
+                        raise ValueError(
+                            f"request {r.rid}: prompt ({plen}) + "
+                            f"max_new ({r.max_new}) overflows the "
+                            f"slot page (max_len={self.max_len})")
+                    padded = np.zeros(
+                        (1, min(bucket_pow2(plen), self.max_len)),
+                        np.int32)
+                    padded[0, :plen] = np.asarray(r.prompt)
+                    logits, rs.cache = model.prefill_into_slot(
+                        sp, jnp.asarray(padded), rs.cache, s, plen)
+                    tok = int(np.asarray(jnp.argmax(logits, -1))[0])
                     r.out.append(tok)
-                    st["tokens"] += 1
-                    tokens[s, 0] = tok
-                    slot_steps[s] += 1
+                    rs.st["admitted"] += 1
+                    rs.st["tokens"] += 1
                     if len(r.out) >= r.max_new:
                         r.done = True
-                    if r.done or slot_steps[s] >= max_steps:
-                        if not r.done:
-                            st["preempted"] += 1
-                        slot_req[s] = None     # out of budget: free, not done
-                        cache["pos"] = cache["pos"].at[s].set(0)
-        self._set_stats(st, occ_sum, time.perf_counter() - t0)
-        return requests
+                        rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+                    else:
+                        slot_req[s] = r
+                        rs.slot_idx[s] = idx
+                        rs.slot_steps[s] = 0
+                        rs.tokens[s, 0] = tok
+            if not any(r is not None for r in slot_req):
+                continue    # everyone finished at prefill; admit more
+            # -- injected faults for the upcoming pool step: hard faults
+            # abort the session (the recovery loop restores); straggle
+            # slows THIS step so the watchdog sees it like a real one
+            delay = 0.0
+            if injector is not None:
+                f = injector.on_decode_step(rs.step)
+                if f is not None and f.kind in ("host", "crash"):
+                    raise _EngineFault(f)
+                if f is not None and f.kind == "straggle":
+                    delay = f.delay_s
+                    if f.host is not None:
+                        rs.suspect = f.host
+            # -- one decode step for the WHOLE pool (free slots carry
+            # don't-care tokens; their writes drop / get overwritten)
+            rs.occ_sum += sum(r is not None for r in slot_req) / self.slots
+            rs.st["decode_steps"] += 1
+            t_step = time.perf_counter()
+            if delay:
+                time.sleep(delay)
+            logits, rs.cache = model.decode_step_slots(
+                sp, jnp.asarray(rs.tokens), rs.cache)
+            nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+            dt = time.perf_counter() - t_step
+            for s, r in enumerate(slot_req):
+                if r is None:
+                    continue
+                tok = int(nxt[s])
+                r.out.append(tok)
+                rs.st["tokens"] += 1
+                rs.tokens[s, 0] = tok
+                rs.slot_steps[s] += 1
+                if len(r.out) >= r.max_new:
+                    r.done = True
+                if r.done or rs.slot_steps[s] >= max_steps:
+                    if not r.done:
+                        rs.st["preempted"] += 1
+                    slot_req[s] = None     # out of budget: free, not done
+                    rs.slot_idx[s] = -1
+                    rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+            rs.step += 1
+            # -- straggler policy: sustained straggle sheds admission with
+            # bounded exponential backoff; persisting past the budget, it
+            # escalates to evicting the suspect host (checkpoint first)
+            if wd.observe(rs.step - 1, dt):
+                rs.straggle_run += 1
+            else:
+                rs.straggle_run = 0
+            if rs.straggle_run >= cfg.straggle_patience and rs.backoff == 0:
+                if rs.shed_rounds >= cfg.straggle_escalate:
+                    self._save_slot_ckpt(rs, requests, ft)
+                    raise _EngineFault(Fault("host", host=rs.suspect))
+                rs.shed_rounds += 1
+                ft["shed_rounds"] += 1
+                rs.backoff = min(cfg.shed_cap,
+                                 cfg.shed_base * 2 ** (rs.shed_rounds - 1))
+                rs.straggle_run = 0
+                self._save_slot_ckpt(rs, requests, ft)     # on-demand
+            elif cfg.ckpt_every > 0 and rs.step % cfg.ckpt_every == 0:
+                self._save_slot_ckpt(rs, requests, ft)
 
     def _set_stats(self, st: dict, occ_sum: float, wall_s: float) -> None:
         st["wall_s"] = wall_s

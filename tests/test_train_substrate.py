@@ -11,7 +11,7 @@ from repro.checkpoint import (CheckpointManager, latest_step,
                               restore_checkpoint, save_checkpoint)
 from repro.checkpoint.ckpt import all_steps
 from repro.data import DataConfig, Prefetcher, TokenPipeline
-from repro.dist.fault import FaultTolerantLoop, StragglerWatchdog
+from repro.dist.fault import FaultTolerantLoop, LoopStats, StragglerWatchdog
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, compress_int8, cosine_schedule,
                          decompress_int8)
@@ -186,6 +186,42 @@ def test_checkpoint_atomicity(tmp_path):
     assert latest_step(d) == 7
 
 
+def test_checkpoint_multihost_single_writer_commit(tmp_path):
+    """Two hosts saving the same step must not race the commit: both
+    stage into ONE shared tmp dir, host 0 renames only after every host's
+    barrier file lands — the final dir holds both shards."""
+    import threading
+    d = str(tmp_path / "ck")
+    t1 = threading.Thread(target=save_checkpoint, args=(d, 5, _state(1.0)),
+                          kwargs={"host_id": 1, "n_hosts": 2})
+    t1.start()
+    save_checkpoint(d, 5, _state(2.0), host_id=0, n_hosts=2)
+    t1.join()
+    assert os.listdir(d) == ["step_00000005"]          # no tmp leftovers
+    files = sorted(os.listdir(os.path.join(d, "step_00000005")))
+    assert files == ["host_00000.npz", "host_00001.npz", "manifest.json"]
+    st0, _, man = restore_checkpoint(d, _state(0.0), host_id=0)
+    st1, _, _ = restore_checkpoint(d, _state(0.0), host_id=1)
+    assert float(st0["params"]["w"][0, 0]) == 2.0
+    assert float(st1["params"]["w"][0, 0]) == 1.0
+    assert man["n_hosts"] == 2
+
+
+def test_checkpoint_bfloat16_roundtrip(tmp_path):
+    """Extension dtypes survive np.savez only as raw void bytes — restore
+    must view them back to the manifest dtype (a bf16 KV cache is the
+    default serving checkpoint payload; regression for the |V2 crash)."""
+    d = str(tmp_path / "ck")
+    state = {"kv": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+             "pos": jnp.asarray([1, 2, 3], jnp.int32)}
+    save_checkpoint(d, 2, state)
+    st, step, man = restore_checkpoint(d, state)
+    assert step == 2
+    assert man["leaves"]["kv"]["dtype"] == "bfloat16"
+    assert jnp.asarray(st["kv"]).dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.asarray(st["kv"]) == state["kv"]))
+
+
 def test_checkpoint_elastic_reshard(tmp_path):
     """Restore with explicit (different) shardings -> device_put path."""
     d = str(tmp_path / "ck")
@@ -263,6 +299,36 @@ def test_fault_loop_gives_up_after_retries(tmp_path):
     # failure is persistent (inject returns True every visit to step 3)
     with pytest.raises(RuntimeError):
         loop.run(state, 0, 10)
+
+
+def test_loop_stats_record_loss_dedupes_replays():
+    st = LoopStats()
+    for s in (0, 1, 2):
+        st.record_loss(s, float(s))
+    st.record_loss(1, 10.0)            # replayed step overwrites in place
+    st.record_loss(2, 20.0)
+    assert st.losses == [0.0, 10.0, 20.0]
+
+
+def test_fault_loop_losses_one_entry_per_step(tmp_path):
+    """Replayed steps after a restore must not duplicate loss entries —
+    the faulty run's loss curve matches the clean run's exactly."""
+    loop_a, state_a = _quadratic_setup(tmp_path / "a")
+    _, stats_a = loop_a.run(state_a, 0, 30)
+
+    seen = set()
+
+    def inject(step):
+        if step in (12, 23) and step not in seen:
+            seen.add(step)
+            return True
+        return False
+
+    loop_b, state_b = _quadratic_setup(tmp_path / "b", inject=inject)
+    _, stats_b = loop_b.run(state_b, 0, 30)
+    assert len(stats_b.losses) == 30 == len(stats_a.losses)
+    np.testing.assert_allclose(stats_a.losses, stats_b.losses,
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_straggler_watchdog():

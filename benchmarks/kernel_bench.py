@@ -556,6 +556,94 @@ def bench_serve_fault_vs_clean(iters: int = 3, slots: int = 4,
     return out
 
 
+# ---------------------------------------------------------------------------
+# kernel_vs_jnp: does the impl registry pick the measured winner? (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+#: (label, (B, Sq, Skv, Hq, Hkv, D, causal)) — one shape where the
+#: blockwise online-softmax measurably beats the materialized score matrix
+#: (decode against a long KV: score bytes + K/V repeat dominate) and one
+#: where it loses (tiny prefill: per-block scan dispatch swamps a 16x16
+#: score matrix).  The gate asserts the roofline argmin matches the
+#: measured winner on BOTH — i.e. the cost model earns its keep at both
+#: ends of the regime, not just where kernels shine.
+_KVJ_SHAPES = (
+    ("long_kv", (4, 1, 8192, 8, 2, 64, False)),
+    ("short_seq", (2, 16, 16, 4, 4, 32, True)),
+)
+
+
+def bench_kernel_vs_jnp(iters: int = 30, json_path="BENCH_kernel.json"):
+    """Measures every available attention candidate (forced via
+    ``TapirConfig.force_impl``) against the impl registry's roofline
+    choice on the two gate shapes.  Passes when ``schedule.impl`` names
+    the measured-fastest impl on both."""
+    out = {"shapes": {}}
+    ok_all = True
+    for label, (B, Sq, Skv, Hq, Hkv, D, causal) in _KVJ_SHAPES:
+        key = jax.random.PRNGKey(11)
+        q = jax.random.normal(key, (B, Sq, Hq, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1),
+                              (B, Skv, Hkv, D), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2),
+                              (B, Skv, Hkv, D), jnp.float32)
+
+        # 1. what does the registry pick, and what did it estimate?
+        clear_cache()
+        with use(TapirConfig(mode="tapir", backend="cpu")):
+            tapir.attention(q, k, v, causal=causal)
+        node = next(n for g in tapir.cached_graphs().values()
+                    for n in g.nodes.values() if n.op == "attention")
+        model_impl, model_costs = node.schedule.impl, dict(node.schedule.impl_costs)
+
+        # 2. measure each available candidate through the same jit path
+        measured = {}
+        for impl, cost in model_costs.items():
+            if not isinstance(cost, float):
+                continue
+            cfg = TapirConfig(mode="tapir", backend="cpu",
+                              force_impl=(("attention", impl),))
+            clear_cache()
+
+            @jax.jit
+            def run(q, k, v):
+                with use(cfg):
+                    return tapir.attention(q, k, v, causal=causal)
+
+            jax.block_until_ready(run(q, k, v))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(q, k, v))
+                ts.append(time.perf_counter() - t0)
+            measured[impl] = float(np.median(ts))
+
+        winner = min(measured, key=measured.get)
+        ok = model_impl == winner
+        ok_all = ok_all and ok
+        margin = max(measured.values()) / measured[winner]
+        print(f"kernel_vs_jnp {label:10s} model={model_impl:20s} "
+              f"measured_winner={winner:20s} "
+              f"({', '.join(f'{i}={t*1e3:.2f}ms' for i, t in sorted(measured.items(), key=lambda kv: kv[1]))}) "
+              f"{'OK' if ok else 'MISMATCH'}")
+        out["shapes"][label] = {
+            "shape": {"B": B, "Sq": Sq, "Skv": Skv, "Hq": Hq,
+                      "Hkv": Hkv, "D": D, "causal": causal},
+            "model_impl": model_impl,
+            "model_costs": {i: (c if isinstance(c, float) else str(c))
+                            for i, c in model_costs.items()},
+            "measured_s": measured, "measured_winner": winner,
+            "winner_margin": margin, "model_correct": ok,
+        }
+    out["model_correct"] = ok_all
+    print(f"kernel_vs_jnp cost model picked the measured winner on "
+          f"{'BOTH shapes' if ok_all else 'FEWER THAN BOTH shapes'}")
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
@@ -563,7 +651,8 @@ def main():
                              "decode_region_vs_per_op",
                              "serve_continuous_vs_wave",
                              "serve_mesh_vs_single",
-                             "serve_fault_vs_clean"])
+                             "serve_fault_vs_clean",
+                             "kernel_vs_jnp"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -587,6 +676,9 @@ def main():
     if args.case == "serve_fault_vs_clean":
         bench_serve_fault_vs_clean(iters=args.iters,
                                    json_path=args.json or "BENCH_fault.json")
+        return
+    if args.case == "kernel_vs_jnp":
+        bench_kernel_vs_jnp(json_path=args.json or "BENCH_kernel.json")
         return
 
     key = jax.random.PRNGKey(0)

@@ -36,7 +36,10 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     devices are not a perf proxy), or serve_fault_vs_clean loses
     bitwise per-request equality between the faulted and clean runs /
     its recovery overhead exceeds ``max_fault_overhead`` wall-clock
-    with one injected failure."""
+    with one injected failure, or kernel_vs_jnp's impl registry stops
+    picking the measured-fastest attention impl on either gate shape
+    (a long-KV decode where blockwise wins and a tiny prefill where the
+    materialized score matrix wins)."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -49,6 +52,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_mesh.json"))
     fv = kernel_bench.bench_serve_fault_vs_clean(
         json_path=os.path.join(out_dir, "BENCH_fault.json"))
+    kv = kernel_bench.bench_kernel_vs_jnp(
+        json_path=os.path.join(out_dir, "BENCH_kernel.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -89,6 +94,12 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     if fv["overhead"] >= max_fault_overhead:
         failures.append(f"fault recovery overhead {fv['overhead']*100:.1f}% "
                         f">= {max_fault_overhead*100:.0f}% wall-clock")
+    for label, shp in kv["shapes"].items():
+        if not shp["model_correct"]:
+            failures.append(
+                f"kernel_vs_jnp[{label}]: impl registry picked "
+                f"{shp['model_impl']} but {shp['measured_winner']} measured "
+                f"fastest")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -98,7 +109,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           f"decode {dv['speedup']:.2f}x, "
           f"serve {sv['speedup']:.2f}x, mesh bitwise "
           f"({mv['mesh_annotated_nodes']} sharded nodes), fault recovery "
-          f"{fv['overhead']*100:+.1f}% bitwise, donated")
+          f"{fv['overhead']*100:+.1f}% bitwise, donated, kernel_vs_jnp "
+          f"impl choice measured-correct on both shapes")
     return 0
 
 

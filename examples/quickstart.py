@@ -71,6 +71,31 @@ def region_demo():
           f"({len(g.nodes)} nodes total), out {tuple(y.shape)}")
 
 
+def explain_demo():
+    """Schedule observability: ``tapir.explain`` prints, per library node,
+    the implementation the cost-model registry chose, the full candidate
+    cost table it evaluated (``n/a`` = unavailable on this target), tiles,
+    and the scheduler's notes — why each attention/GEMM/scan lowered the
+    way it did, no debugger needed.  A long-KV decode picks the blockwise
+    online-softmax (score matrix never materializes); a tiny prefill picks
+    the materialized einsum (one scan step costs more than streaming a
+    16x16 score matrix)."""
+    from repro.core import tapir
+
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (4, 1, 8, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (4, 8192, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (4, 8192, 2, 64))
+    clear_cache()
+    with use(TapirConfig(mode="tapir")):
+        tapir.attention(q, k, v)                      # long-KV decode
+        tiny = jax.random.normal(jax.random.fold_in(key, 3), (2, 16, 4, 32))
+        tapir.attention(tiny, tiny, tiny, causal=True)  # tiny prefill
+    print("schedule explain (impl = cost-model argmin per library op):")
+    for line in tapir.explain().splitlines():
+        print(" ", line)
+
+
 def stateful_decode_demo():
     """Stateful region capture: a decode step that WRITES a KV-style cache
     buffer in place.  ``tapir.cache_write`` records a dynamic_update_slice
@@ -230,6 +255,7 @@ def main():
     print("numerics: tapir == opaque ✓")
     print("graph cache:", cache_stats())
     region_demo()
+    explain_demo()
     stateful_decode_demo()
     continuous_batching_demo()
     fault_tolerance_demo()

@@ -93,7 +93,21 @@ class Schedule:
     dim_binding: dict[int, str] = field(default_factory=dict)
     tile: dict[str, int] = field(default_factory=dict)  # e.g. {"bm":128,"bn":128,"bk":512}
     serialized: bool = False          # whole node serialized (small-task)
-    use_kernel: bool = False          # lower via Pallas kernel (TPU target)
+    # Implementation choice for library ops: a candidate name from
+    # ``core.schedule``'s per-op impl registry (e.g. attention ->
+    # "flash_kernel" | "blockwise" | "materialized_repeat" |
+    # "materialized_grouped" | "ref"), bound by ``assign_schedules`` as the
+    # roofline-cost argmin over the candidates available on the target.
+    # ``core.lowering`` dispatches on this field alone — no backend or
+    # shape test re-derives the choice at lowering time.  "" = primitive
+    # node or a graph that never went through scheduling; "opaque" = the
+    # sealed stock-XLA lowering (``assign_early_heuristics``).
+    impl: str = ""
+    # candidate -> estimated per-shard seconds (float), or a "n/a (...)"
+    # string for candidates unavailable on the target.  Recorded by the
+    # same pass for observability (``TaskGraph.dump_schedule`` /
+    # ``tapir.explain``) — the argmin over the float entries is ``impl``.
+    impl_costs: dict[str, Any] = field(default_factory=dict)
     notes: list[str] = field(default_factory=list)
 
 
@@ -367,14 +381,54 @@ class TaskGraph:
         return sum(n.flops() for n in self.nodes.values())
 
     def signature(self) -> tuple:
-        """Hashable structural signature (for the lowering cache)."""
+        """Hashable structural signature (for the lowering cache).  The
+        bound ``schedule.impl`` participates: two graphs that scheduled the
+        same node to different implementations lower differently and must
+        not share a cache entry (raw pre-schedule graphs carry "" and are
+        unaffected)."""
         parts = []
         for nid in self.topo_order():
             n = self.nodes[nid]
-            parts.append((n.key(), n.anti,
+            parts.append((n.key(), n.anti, n.schedule.impl,
                           tuple((fn, extra, _freeze(a)) for fn, extra, a in n.epilogue)))
         return (self.name, tuple(parts), tuple(self.outputs),
                 tuple(n for n, _ in self.inputs))
+
+    def dump_schedule(self) -> str:
+        """Human-readable schedule report: one block per library node with
+        the chosen implementation, the full candidate cost table the
+        impl registry evaluated (``n/a`` entries were unavailable on the
+        target), and the schedule notes.  Surfaced as ``tapir.explain`` —
+        the observability hook for "why did this node lower that way"."""
+
+        def fmt(v):
+            if not isinstance(v, float):
+                return str(v)
+            return f"{v*1e6:.1f}us" if v < 1e-3 else f"{v*1e3:.2f}ms"
+
+        lines = [f"schedule[{self.name}]:"]
+        n_lib = 0
+        for nid in self.topo_order():
+            n = self.nodes[nid]
+            if n.op not in LIBRARY_OPS:
+                continue
+            n_lib += 1
+            lines.append(f"  %{nid} {n.op} {n.ttype.dtype}"
+                         f"{list(n.ttype.shape)} impl={n.schedule.impl or '?'}")
+            if n.schedule.impl_costs:
+                ranked = sorted(
+                    n.schedule.impl_costs.items(),
+                    key=lambda kv: (not isinstance(kv[1], float),
+                                    kv[1] if isinstance(kv[1], float) else 0.0))
+                lines.append("      costs: " + "  ".join(
+                    f"{name}={fmt(v)}" for name, v in ranked))
+            if n.schedule.tile:
+                lines.append(f"      tile: {n.schedule.tile}")
+            for note in n.schedule.notes:
+                lines.append(f"      note: {note}")
+        if n_lib == 0:
+            lines.append("  (no library ops)")
+        return "\n".join(lines)
 
     def __repr__(self) -> str:
         lines = [f"TaskGraph({self.name})"]

@@ -2,16 +2,25 @@
 
 The emitter walks the graph in topological order and produces a python
 callable (traced under ``jax.jit`` by callers).  The *same* graph lowers
-differently depending on the schedule the passes attached:
+differently depending on the schedule the passes attached: each library
+node dispatches on ``node.schedule.impl`` — the name the scheduler's impl
+registry (``core.schedule.IMPL_REGISTRY``) bound as the roofline argmin
+over that op's candidate lowerings.  No backend flag or shape threshold is
+re-derived here; the cost model already decided.
 
-* exposed library ops with ``use_kernel`` lower to Pallas kernels (TPU
-  target; interpret mode in tests) with their fused epilogues executed
-  inside the kernel;
-* exposed library ops without kernels lower to single fused jnp composites
-  (one expression — XLA fuses the epilogue into the GEMM loop);
-* sealed library ops (opaque mode) lower the way stock XLA emitted Eigen
-  calls: isolated per-op calls, per-expert loops for batched GEMMs,
-  materialized attention scores, sequential scans.
+* kernel impls (``flash_kernel`` / ``fused_kernel`` / ``kernel``) lower to
+  Pallas kernels (TPU target; interpret mode in tests) with fused epilogues
+  executed inside the kernel;
+* jnp impls (``blockwise`` / ``chunked`` / ``materialized_*`` / ``einsum``
+  / ``ref``) lower to fused jnp composites — ``blockwise``/``chunked`` keep
+  their loop bodies under the ``tapir_vmem_body`` scope so ``launch.
+  hlo_cost`` can discount VMEM-resident traffic;
+* ``"opaque"`` (sealed ops, early-heuristic mode) lowers the way stock XLA
+  emitted Eigen calls: isolated per-op calls, per-expert loops for batched
+  GEMMs, materialized attention scores, sequential scans.
+
+An empty ``impl`` (a graph emitted without scheduling) falls back by the
+``exposed`` attr alone.
 """
 from __future__ import annotations
 
@@ -65,7 +74,8 @@ def _lower_matmul(node: Node, env: dict, backend: str,
     else:
         acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
 
-    if exposed and node.schedule.use_kernel and backend == "tpu" and w.ndim == 2:
+    impl = node.schedule.impl or ("einsum" if exposed else "opaque")
+    if impl == "fused_kernel" and w.ndim == 2:
         from repro.kernels import fused_matmul as fm
         epi = [(fn, [env[e] for e in extras], at)
                for fn, extras, at in node.epilogue]
@@ -77,7 +87,7 @@ def _lower_matmul(node: Node, env: dict, backend: str,
         # shared-input (QKV) fusion: one batched GEMM over stacked weights;
         # each stack slot keeps its own TP shard (no misaligned slices)
         y = jnp.einsum("...k,nkw->n...w", x, w, preferred_element_type=acc)
-    elif w.ndim == 3 and not exposed:
+    elif w.ndim == 3 and impl == "opaque":
         # opaque mode: per-expert "library calls" — an isolated GEMM per
         # leading-dim slice, exactly how pre-fusion XLA emitted MoE experts.
         outs = [jnp.matmul(x[e], w[e], preferred_element_type=acc)
@@ -98,44 +108,38 @@ def _lower_attention(node: Node, env: dict, backend: str) -> Any:
     exposed = node.attrs.get("exposed", False)
     out_dtype = node.ttype.dtype
 
-    if exposed and node.schedule.use_kernel and backend == "tpu" \
-            and q.shape[1] > 1 and bias is None:
+    impl = node.schedule.impl or ("ref" if exposed else "opaque")
+
+    if impl == "opaque":
+        # sealed: materialized score matrix, separate softmax ops, repeated
+        # KV, and no fused epilogue — exactly how stock XLA emitted it
+        y = _materialized_attention(q, k, v, causal, bias, grouped=False)
+        return y.astype(out_dtype)
+
+    if impl == "flash_kernel":
         from repro.kernels import flash_attention as fa
         # custom-VJP wrapper: the kernel forward stays a Pallas call and
         # the backward is the recompute-based flash gradient
         y = fa.ops.flash_attention_vjp(
             q, k, v, causal, node.schedule.tile.get("bq", 128),
             node.schedule.tile.get("bkv", 128))
-        return _apply_epilogue(y, node, env).astype(out_dtype)
-
-    if exposed:
+    elif impl == "blockwise":
         from repro.kernels import flash_attention as fa
-        if bias is None and k.shape[1] >= 2048:
-            # large KV: blockwise online-softmax (never materializes
-            # scores).  The named scope marks the loop body as
-            # VMEM-resident on the TPU target (the Pallas kernel keeps
-            # score/accumulator tiles on-chip); launch.hlo_cost discounts
-            # these ops' HBM traffic accordingly.
-            with jax.named_scope("tapir_vmem_body"):
-                y = fa.ops.flash_attention_jnp(
-                    q, k, v, causal=causal,
-                    block_kv=node.schedule.tile.get("bkv", 1024))
-        elif backend == "cpu":
-            # late scheduling, CPU target: materialized scores.  Whether the
-            # K/V head group folds into the einsum (no copy) or K/V repeat
-            # to full head count (BLAS-shaped batched GEMM) is the cost
-            # model's call (schedule.pick_gqa_impl): repeat when the copy
-            # amortizes against compute, grouped when KV bytes dominate.
-            grouped = node.attrs.get("gqa_impl", "grouped") != "repeat"
-            y = _materialized_attention(q, k, v, causal, bias, grouped=grouped)
-        else:
-            # fused composite: one expression, fp32 accum, grouped KV heads
-            y = fa.ref.attention_ref(q, k, v, causal=causal, bias=bias)
-        return _apply_epilogue(y, node, env).astype(out_dtype)
-
-    # opaque: materialized score matrix, separate softmax ops, repeated KV
-    y = _materialized_attention(q, k, v, causal, bias, grouped=False)
-    return y.astype(out_dtype)
+        # online-softmax over KV blocks (never materializes scores).  The
+        # named scope marks the loop body as VMEM-resident on the TPU
+        # target (the Pallas kernel keeps score/accumulator tiles
+        # on-chip); launch.hlo_cost discounts these ops' HBM traffic.
+        with jax.named_scope("tapir_vmem_body"):
+            y = fa.ops.flash_attention_jnp(
+                q, k, v, causal=causal,
+                block_kv=node.schedule.tile.get("bkv", 1024))
+    elif impl in ("materialized_repeat", "materialized_grouped"):
+        y = _materialized_attention(q, k, v, causal, bias,
+                                    grouped=impl == "materialized_grouped")
+    else:  # "ref": fused composite — one expression, fp32 accum, grouped KV
+        from repro.kernels import flash_attention as fa
+        y = fa.ref.attention_ref(q, k, v, causal=causal, bias=bias)
+    return _apply_epilogue(y, node, env).astype(out_dtype)
 
 
 def _materialized_attention(q, k, v, causal, bias, grouped=False):
@@ -181,17 +185,18 @@ def _lower_linear_scan(node: Node, env: dict, backend: str) -> Any:
     u = env[node.inputs[4]] if len(node.inputs) > 4 else None
     exposed = node.attrs.get("exposed", False)
     out_dtype = node.ttype.dtype
-    if exposed and node.schedule.use_kernel and backend == "tpu":
+    impl = node.schedule.impl or ("chunked" if exposed else "opaque")
+    if impl == "kernel":
         y = ls.ops.linear_scan(q, k, v, w, u=u,
                                chunk=node.schedule.tile.get("chunk", 128))
-    elif exposed:
+    elif impl == "chunked":
         # chunk-body intermediates are VMEM-resident in the Pallas kernel
         # on the TPU target (see launch.hlo_cost)
         with jax.named_scope("tapir_vmem_body"):
             y = ls.ops.linear_scan_chunked(
                 q, k, v, w, u=u,
                 chunk=node.schedule.tile.get("chunk", 128))
-    else:
+    else:  # "ref" / "opaque": the sequential element recurrence
         y = ls.ref.linear_scan_ref(q, k, v, w, u=u)
     return _apply_epilogue(y, node, env).astype(out_dtype)
 

@@ -10,6 +10,8 @@ Mirrors TapirXLA's split:
 """
 from __future__ import annotations
 
+import dataclasses
+
 from ..ir import TaskGraph
 from ..schedule import CostModel, assign_early_heuristics, assign_schedules
 from .cse import cse
@@ -72,7 +74,8 @@ def mesh_fingerprint() -> tuple:
 
 
 def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
-                 ablate_serialization: bool = False) -> TaskGraph:
+                 ablate_serialization: bool = False,
+                 force_impl: tuple | None = None) -> TaskGraph:
     if mode == "opaque":
         seal_libraries(g)
         assign_early_heuristics(g, cm)
@@ -93,12 +96,14 @@ def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
                       or mesh_has_model_axis())
     fuse_epilogues(g)
     g.prune()
-    cm_eff = cm if not ablate_serialization else CostModel(
-        name=cm.name + "+noserial", peak_flops=cm.peak_flops, hbm_bw=cm.hbm_bw,
-        ici_bw=cm.ici_bw, vmem_bytes=cm.vmem_bytes, mxu=cm.mxu,
-        grain_flops=0.0, unroll_max_trip=cm.unroll_max_trip)
+    # replace() keeps every other constant (grain_bytes, spawn_s, score
+    # passes, ...) — a field-by-field rebuild silently reset the ones it
+    # forgot to copy
+    cm_eff = cm if not ablate_serialization else dataclasses.replace(
+        cm, name=cm.name + "+noserial", grain_flops=0.0)
     # per-shard costs: nodes carrying a sharding constraint do 1/shard of
-    # the work per device — grain/GQA decisions must see per-shard numbers
+    # the work per device — grain/impl decisions must see per-shard numbers
     assign_schedules(g, cm_eff, backend=backend,
-                     mesh_axes=dict(mesh_fingerprint()))
+                     mesh_axes=dict(mesh_fingerprint()),
+                     force_impl=force_impl)
     return g

@@ -10,7 +10,14 @@ model over the optimized code.  This module is the TPU analogue:
   spawn overhead).
 * ``assign_schedules`` walks the *fused* graph and binds each parallel dim to
   ``mesh:<axis>`` / ``grid`` / ``serial`` / ``vector``, picks MXU-aligned tile
-  sizes that fit VMEM (strip-mining), and serializes small tasks.
+  sizes that fit VMEM (strip-mining), serializes small tasks, and binds each
+  library node's IMPLEMENTATION: every library op (matmul, attention,
+  linear_scan, conv2d) has a registry of candidate lowerings (``IMPL_REGISTRY``),
+  each carrying a roofline cost estimate (FLOPs + bytes moved + serial
+  dispatch steps, per shard) and availability constraints; the argmin is
+  bound to ``node.schedule.impl`` and ``core.lowering`` dispatches on that
+  field alone — no ``backend == "tpu"`` flag or shape threshold re-derives
+  the choice downstream.
 
 In ``mode="opaque"`` the pipeline instead calls ``assign_early_heuristics``
 *before* any optimization pass, reproducing stock-XLA behaviour for the A/B
@@ -19,11 +26,14 @@ benchmark.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from .ir import Node, TaskGraph, dtype_bytes
+from .ir import LIBRARY_OPS, Node, TaskGraph, dtype_bytes
+from repro.kernels.flash_attention.ops import attention_cost
+from repro.kernels.fused_matmul.ops import matmul_cost
+from repro.kernels.linear_scan.ops import SAFE_CHUNK, scan_cost
 
 
 @dataclass(frozen=True)
@@ -48,12 +58,28 @@ class CostModel:
     # attention's compute time (decode against a long cache flips to the
     # grouped einsum — KV bytes dominate there).
     gqa_repeat_frac: float = 0.25
+    # Per-serial-step dispatch overhead (a lax.scan trip, a sequential
+    # library call) — the literal Cilk spawn-overhead analogue the impl
+    # registry charges blockwise/chunked candidates per step.  This is
+    # what makes a tiny attention pick the materialized einsum over the
+    # online-softmax scan: one scan step costs more than streaming a
+    # 16x16 score matrix.
+    spawn_s: float = 1e-6
+    # Round-trips over the fp32 score matrix charged to impls that
+    # materialize it (einsum-write, mask, softmax, PV-read).
+    score_passes_materialized: float = 4.0
+    # Same for the fused single-expression composite (``ref``): on the TPU
+    # target the fused score tiles stay VMEM-resident (~1 pass); a CPU has
+    # no scratchpad, so the fused form still walks the score matrix
+    # through the cache hierarchy like the materialized one does.
+    score_passes_fused: float = 1.0
 
 
 CPU_COST_MODEL = CostModel(name="cpu_host", peak_flops=5e10, hbm_bw=2e10,
                            ici_bw=1e9, vmem_bytes=1 << 21, mxu=8,
                            grain_flops=1 << 14, grain_bytes=1 << 16,
-                           unroll_max_trip=8)
+                           unroll_max_trip=8, spawn_s=2e-5,
+                           score_passes_fused=4.0)
 
 
 def _align(x: int, m: int) -> int:
@@ -101,6 +127,23 @@ def pick_attention_tiles(s_q: int, s_kv: int, d: int, dtype: str, cm: CostModel)
     while eb * (bq * d + 2 * bkv * d) + 4 * bq * (bkv + d) > budget and bq > cm.mxu:
         bq //= 2
     return {"bq": min(bq, max(s_q, 1)), "bkv": min(bkv, max(s_kv, 1))}
+
+
+def pick_scan_chunk(seq: int, d_k: int, d_v: int, dtype: str,
+                    cm: CostModel) -> int:
+    """Linear-scan chunk size: the largest chunk whose per-task working set
+    (q/k/w/v chunk tiles + the fp32 [C,C] factored score block + the
+    [Dk,Dv] carry) fits a VMEM budget, capped at the numerically-exact
+    bound for the factored score matmul (``kernels/linear_scan/ops.
+    SAFE_CHUNK`` — imported, so the cap can't drift from the kernel's)."""
+    eb = dtype_bytes(dtype)
+    # the [Dk,Dv] carry is chunk-independent (subtract it, but never let a
+    # huge state zero the budget — the kernel streams it regardless)
+    budget = max(cm.vmem_bytes // 4 - 4 * d_k * d_v, cm.vmem_bytes // 32)
+    c = SAFE_CHUNK
+    while c > 1 and eb * c * (3 * d_k + d_v) + 4 * c * c > budget:
+        c //= 2
+    return max(1, min(c, max(seq, 1)))
 
 
 def _dim_shard(node: Node, d: int, mesh_axes: Optional[dict]) -> int:
@@ -169,12 +212,246 @@ def pick_gqa_impl(node: Node, cm: CostModel, backend: str,
 
 
 # ---------------------------------------------------------------------------
+# Implementation registry (the TapirXLA selection point): every library op
+# has a list of candidate lowerings, each costed by the same roofline the
+# rest of the scheduler uses, and ``assign_schedules`` binds the argmin to
+# ``node.schedule.impl``.  ``core.lowering`` dispatches on that field alone.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ImplCandidate:
+    """One candidate lowering of a library op: its roofline time per shard,
+    or ``None`` with a reason when the backend/shape rules it out."""
+    name: str
+    cost_s: Optional[float]
+    why: str = ""
+
+
+def _fmt_s(t: float) -> str:
+    return f"{t * 1e6:.1f}us" if t < 1e-3 else f"{t * 1e3:.2f}ms"
+
+
+def attention_candidates(g: TaskGraph, node: Node, cm: CostModel,
+                         backend: str, mesh_axes: Optional[dict] = None
+                         ) -> list[ImplCandidate]:
+    """Five ways to run scaled-dot-product attention, costed per shard:
+
+    * ``flash_kernel``       — Pallas flash kernel (TPU, S>1, no bias)
+    * ``blockwise``          — online-softmax lax.scan over KV blocks; never
+                               materializes scores but pays ``spawn_s`` per
+                               block step (the Cilk spawn-overhead analogue)
+    * ``materialized_repeat``— fp32 score matrix, K/V repeated to full head
+                               count (BLAS-shaped batched GEMM; CPU + GQA)
+    * ``materialized_grouped``— fp32 score matrix, grouped contraction
+                               (no K/V copy; grouped-einsum penalty on GQA)
+    * ``ref``                — single fused composite expression
+
+    The repeat-vs-grouped comparison reduces to exactly the inequality
+    ``pick_gqa_impl`` tests (same copy bytes over the same kv shard vs the
+    same ``gqa_repeat_frac`` compute fraction), so the two stay consistent
+    by construction."""
+    b, sq, h, d = node.attrs["q_shape"]
+    skv = node.attrs["kv_len"]
+    hkv = node.attrs.get("kv_heads", h) or h
+    grp = h // hkv
+    eb = dtype_bytes(node.ttype.dtype)
+    has_bias = len(node.inputs) > 3
+    shard = shard_factor(node, mesh_axes)
+    # the K/V repeat-copy shards like pick_gqa_impl's kv_shard (batch, and
+    # heads only when Hkv divides the head split), NOT the full factor
+    h_split = _dim_shard(node, 2, mesh_axes)
+    kv_shard = max(_dim_shard(node, 0, mesh_axes)
+                   * (h_split if hkv % max(h_split, 1) == 0 else 1), 1)
+    tile = node.schedule.tile or pick_attention_tiles(
+        sq, skv, d, node.ttype.dtype, cm)
+    bkv = tile.get("bkv", 1024)
+    compute_s = node.flops() / cm.peak_flops / shard
+
+    def base(impl: str):
+        c = attention_cost(b, sq, skv, h, hkv, d, eb, impl, block_kv=bkv)
+        return c, (c["flops"] / cm.peak_flops + c["io_bytes"] / cm.hbm_bw) / shard
+
+    out: list[ImplCandidate] = []
+    if backend != "tpu":
+        out.append(ImplCandidate("flash_kernel", None,
+                                 "pallas kernel needs the TPU target"))
+    elif sq <= 1:
+        out.append(ImplCandidate("flash_kernel", None,
+                                 "decode (S=1): kernel q-grid degenerates"))
+    elif has_bias:
+        out.append(ImplCandidate("flash_kernel", None,
+                                 "kernel has no bias operand"))
+    else:
+        _, t = base("flash_kernel")
+        out.append(ImplCandidate("flash_kernel", t))
+
+    if has_bias:
+        out.append(ImplCandidate("blockwise", None, "no bias operand"))
+    else:
+        c, t = base("blockwise")
+        out.append(ImplCandidate("blockwise",
+                                 t + c["steps"] * cm.spawn_s / shard))
+
+    if grp <= 1:
+        out.append(ImplCandidate("materialized_repeat", None,
+                                 "no K/V head group to repeat"))
+    elif backend == "tpu":
+        out.append(ImplCandidate("materialized_repeat", None,
+                                 "HBM repeat-copy unwanted on TPU"))
+    else:
+        c, t = base("materialized_repeat")
+        t += c["score_bytes"] * cm.score_passes_materialized / cm.hbm_bw / shard
+        t += c["copy_bytes"] / cm.hbm_bw / kv_shard
+        out.append(ImplCandidate("materialized_repeat", t))
+
+    c, t = base("materialized_grouped")
+    t += c["score_bytes"] * cm.score_passes_materialized / cm.hbm_bw / shard
+    if grp > 1:
+        t += cm.gqa_repeat_frac * compute_s  # grouped-contraction penalty
+    out.append(ImplCandidate("materialized_grouped", t))
+
+    c, t = base("ref")
+    t += c["score_bytes"] * cm.score_passes_fused / cm.hbm_bw / shard
+    if grp > 1:
+        t += cm.gqa_repeat_frac * compute_s
+    out.append(ImplCandidate("ref", t))
+    return out
+
+
+def matmul_candidates(g: TaskGraph, node: Node, cm: CostModel,
+                      backend: str, mesh_axes: Optional[dict] = None
+                      ) -> list[ImplCandidate]:
+    """``fused_kernel`` (Pallas GEMM, epilogue executed on the VMEM-resident
+    accumulator tile — no epilogue round-trips) vs ``einsum`` (XLA dot; each
+    unfused epilogue op re-walks the output through HBM)."""
+    shape = node.ttype.shape
+    m, n = shape[-2], shape[-1]
+    k = node.attrs["k"]
+    batch = int(np.prod(shape[:-2])) if len(shape) > 2 else 1
+    eb = dtype_bytes(node.ttype.dtype)
+    shard = shard_factor(node, mesh_axes)
+    n_epi = len(node.epilogue)
+    w_nd = (len(g.nodes[node.inputs[1]].ttype.shape)
+            if len(node.inputs) > 1 and node.inputs[1] in g.nodes else 2)
+
+    def roof(impl: str) -> float:
+        c = matmul_cost(batch, m, n, k, eb, impl, n_epilogue=n_epi)
+        return (c["flops"] / cm.peak_flops + c["io_bytes"] / cm.hbm_bw) / shard
+
+    out: list[ImplCandidate] = []
+    if backend != "tpu":
+        out.append(ImplCandidate("fused_kernel", None,
+                                 "pallas kernel needs the TPU target"))
+    elif w_nd != 2:
+        out.append(ImplCandidate("fused_kernel", None,
+                                 "stacked/batched weights (kernel takes 2-D W)"))
+    else:
+        out.append(ImplCandidate("fused_kernel", roof("kernel")))
+    out.append(ImplCandidate("einsum", roof("einsum")))
+    return out
+
+
+def linear_scan_candidates(g: TaskGraph, node: Node, cm: CostModel,
+                           backend: str, mesh_axes: Optional[dict] = None
+                           ) -> list[ImplCandidate]:
+    """``kernel`` (Pallas chunked scan, no per-chunk dispatch) vs ``chunked``
+    (lax.scan over chunks: factored-score extra FLOPs + ``spawn_s`` per
+    chunk) vs ``ref`` (element recurrence: ``spawn_s`` per *timestep*)."""
+    seq = node.attrs["seq"]
+    q_t = g.nodes[node.inputs[0]].ttype
+    b, _, h, d_k = q_t.shape
+    d_v = g.nodes[node.inputs[2]].ttype.shape[-1]
+    eb = dtype_bytes(node.ttype.dtype)
+    shard = shard_factor(node, mesh_axes)
+    chunk = node.schedule.tile.get("chunk") or pick_scan_chunk(
+        seq, d_k, d_v, node.ttype.dtype, cm)
+
+    def roof(impl: str) -> float:
+        c = scan_cost(b, seq, h, d_k, d_v, eb, impl, chunk=chunk)
+        return (c["flops"] / cm.peak_flops + c["io_bytes"] / cm.hbm_bw
+                + c["steps"] * cm.spawn_s) / shard
+
+    out: list[ImplCandidate] = []
+    if backend != "tpu":
+        out.append(ImplCandidate("kernel", None,
+                                 "pallas kernel needs the TPU target"))
+    else:
+        out.append(ImplCandidate("kernel", roof("kernel")))
+    out.append(ImplCandidate("chunked", roof("chunked")))
+    out.append(ImplCandidate("ref", roof("ref")))
+    return out
+
+
+def conv2d_candidates(g: TaskGraph, node: Node, cm: CostModel,
+                      backend: str, mesh_axes: Optional[dict] = None
+                      ) -> list[ImplCandidate]:
+    """conv2d has a single lowering today (XLA's general conv); registered
+    anyway so the decision is observable in ``dump_schedule`` and future
+    kernels slot into the same argmin."""
+    shard = shard_factor(node, mesh_axes)
+    io = float(np.prod(node.ttype.shape)) * dtype_bytes(node.ttype.dtype)
+    for i in node.inputs:
+        t = g.nodes[i].ttype
+        io += float(np.prod(t.shape)) * dtype_bytes(t.dtype)
+    return [ImplCandidate(
+        "xla", (node.flops() / cm.peak_flops + io / cm.hbm_bw) / shard)]
+
+
+# Candidate order is the tie-break: the roofline argmin is taken with a
+# strict ``<``, so on an exact tie the EARLIER candidate wins (kernel over
+# jnp, repeat over grouped — matching pick_gqa_impl's ``<=`` — and
+# materialized over ref, today's CPU behaviour).
+IMPL_REGISTRY: dict[str, Callable] = {
+    "matmul": matmul_candidates,
+    "attention": attention_candidates,
+    "linear_scan": linear_scan_candidates,
+    "conv2d": conv2d_candidates,
+}
+
+
+def pick_impl(g: TaskGraph, node: Node, cm: CostModel, backend: str,
+              mesh_axes: Optional[dict] = None,
+              forced: Optional[str] = None) -> None:
+    """Cost every registered candidate for this library node, record the
+    full table in ``schedule.impl_costs``, and bind the argmin (or the
+    config-``forced`` name) to ``schedule.impl``."""
+    cands = IMPL_REGISTRY[node.op](g, node, cm, backend, mesh_axes)
+    node.schedule.impl_costs = {
+        c.name: (c.cost_s if c.cost_s is not None else f"n/a ({c.why})")
+        for c in cands}
+    if forced is not None:
+        for c in cands:
+            if c.name == forced:
+                if c.cost_s is None:
+                    raise ValueError(
+                        f"forced impl {forced!r} is unavailable for "
+                        f"{node.op} node %{node.nid}: {c.why}")
+                node.schedule.impl = forced
+                node.schedule.notes.append(f"impl: {forced} (forced by config)")
+                return
+        raise ValueError(
+            f"unknown impl {forced!r} for op {node.op!r}; candidates: "
+            f"{[c.name for c in cands]}")
+    best = None
+    for c in cands:
+        if c.cost_s is not None and (best is None or c.cost_s < best.cost_s):
+            best = c
+    node.schedule.impl = best.name
+    n_avail = sum(1 for c in cands if c.cost_s is not None)
+    node.schedule.notes.append(
+        f"impl: {best.name} ({_fmt_s(best.cost_s)} roofline, argmin of "
+        f"{n_avail}/{len(cands)} candidates)")
+
+
+# ---------------------------------------------------------------------------
 # Late scheduling (tapir mode)
 # ---------------------------------------------------------------------------
 
 
 def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu",
-                     mesh_axes: Optional[dict] = None) -> TaskGraph:
+                     mesh_axes: Optional[dict] = None,
+                     force_impl: Optional[tuple] = None) -> TaskGraph:
     """Bind schedules on the optimized graph.
 
     Policy (per parallel dim, largest extent first):
@@ -182,12 +459,16 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu",
       2. dims with per-task work >= grain_flops become Pallas ``grid`` axes;
       3. trailing dims of size >= 8 become ``vector`` (VPU lanes);
       4. everything else is ``serial`` — small-task serialization.
-    Library ops additionally get strip-mined tiles and (on TPU) the Pallas
-    kernel lowering flag.  ``mesh_axes`` (axis name -> size, from the
-    ambient mesh) makes every cost PER-SHARD: a node whose ``sharding``
-    partitions it over mesh axes moves/computes 1/shard per device, so
-    grain-size serialization and the GQA impl choice divide by the shard
-    factor."""
+    Exposed library ops additionally get strip-mined tiles and their
+    IMPLEMENTATION from the roofline argmin over ``IMPL_REGISTRY``
+    (``pick_impl`` -> ``node.schedule.impl``); unexposed library ops are
+    bound to the sealed ``"opaque"`` lowering.  ``mesh_axes`` (axis name ->
+    size, from the ambient mesh) makes every cost PER-SHARD: a node whose
+    ``sharding`` partitions it over mesh axes moves/computes 1/shard per
+    device, so grain-size serialization and every impl choice divide by the
+    shard factor.  ``force_impl`` — ``((op_kind, impl_name), ...)`` pairs —
+    overrides the argmin per op kind (unknown/unavailable names raise)."""
+    forced = dict(force_impl or ())
     cache_ops = ("dynamic_update_slice", "dynamic_slice", "index", "slice",
                  "gather", "scatter")
     for nid in g.topo_order():
@@ -235,24 +516,33 @@ def assign_schedules(g: TaskGraph, cm: CostModel, backend: str = "tpu",
             m, n = shape[-2], shape[-1]
             node.schedule.tile = pick_matmul_tiles(m, n, node.attrs["k"],
                                                    node.ttype.dtype, cm)
-            node.schedule.use_kernel = backend == "tpu"
         elif node.op == "attention":
             b, s, h, d_ = node.attrs["q_shape"]
             node.schedule.tile = pick_attention_tiles(s, node.attrs["kv_len"], d_,
                                                       node.ttype.dtype, cm)
-            node.schedule.use_kernel = backend == "tpu"
+            # the materialized-flavour decision, kept as a node attr for
+            # observability (the registry's repeat/grouped costs reduce to
+            # the same inequality, so the two never disagree)
             node.attrs["gqa_impl"] = pick_gqa_impl(node, cm, backend,
                                                    mesh_axes=mesh_axes)
             if node.attrs["gqa_impl"] == "repeat":
                 node.schedule.notes.append("gqa: repeat K/V (BLAS wins, "
                                            "copy cost amortized)")
         elif node.op == "linear_scan":
-            # chunk the sequence; carry crosses chunks (the join).  Chunk is
-            # capped at the numerically-exact bound for the factored score
-            # matmul (kernels/linear_scan/ops.SAFE_CHUNK).
+            # chunk the sequence; carry crosses chunks (the join).  Derived
+            # from CostModel.vmem_bytes, capped at the numerically-exact
+            # bound for the factored score matmul (SAFE_CHUNK).
             seq = node.attrs["seq"]
-            node.schedule.tile = {"chunk": min(16, max(seq, 1))}
-            node.schedule.use_kernel = backend == "tpu"
+            q_t = g.nodes[node.inputs[0]].ttype
+            d_v = g.nodes[node.inputs[2]].ttype.shape[-1]
+            node.schedule.tile = {"chunk": pick_scan_chunk(
+                seq, q_t.shape[-1], d_v, node.ttype.dtype, cm)}
+        if node.op in LIBRARY_OPS:
+            if node.attrs.get("exposed", False):
+                pick_impl(g, node, cm, backend, mesh_axes=mesh_axes,
+                          forced=forced.get(node.op))
+            else:
+                node.schedule.impl = "opaque"
         node.schedule.serialized = all(
             b == "serial" for b in node.schedule.dim_binding.values()) and bool(
             node.schedule.dim_binding)
@@ -275,6 +565,7 @@ def assign_early_heuristics(g: TaskGraph, cm: CostModel) -> TaskGraph:
             node.schedule.dim_binding[d] = "grid" if d == 0 else "serial"
         if node.op in ("matmul", "attention", "conv2d"):
             node.schedule.tile = {"bm": 256, "bn": 256, "bk": 256}
-        node.schedule.use_kernel = False
+        if node.op in LIBRARY_OPS:
+            node.schedule.impl = "opaque"  # sealed library call, no registry
         node.schedule.notes.append("early-heuristic (opaque mode)")
     return g

@@ -85,6 +85,13 @@ class TapirConfig:
     # become no-ops and every op runs in the per-op regime (the A/B control
     # for the region_vs_per_op benchmark).
     regions: bool = True
+    # impl-registry override: ((op_kind, impl_name), ...) pairs, e.g.
+    # (("attention", "blockwise"),) — forces that candidate for every node
+    # of the kind instead of the roofline argmin (tests/benchmarks that
+    # need a specific lowered path).  Must stay a hashable tuple (part of
+    # the compile-cache key).  Unknown or unavailable names raise at
+    # schedule time.
+    force_impl: Optional[tuple] = None
 
     def resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -141,7 +148,7 @@ def _cfg_key(cfg: TapirConfig, backend: str) -> tuple:
     # programs, executing constraints resolved for the wrong axis size.
     return (cfg.mode, backend, cfg.ablate_serialization,
             cfg.resolved_cost_model().name, cfg.bf16_partials,
-            mesh_fingerprint())
+            cfg.force_impl, mesh_fingerprint())
 
 
 def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
@@ -149,7 +156,8 @@ def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
     """pipeline + emit with cache bookkeeping (shared by per-op + region)."""
     t0 = time.perf_counter()
     g = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
-                     ablate_serialization=cfg.ablate_serialization)
+                     ablate_serialization=cfg.ablate_serialization,
+                     force_impl=cfg.force_impl)
     fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
     if jit:
         donated = g.donated_inputs()
@@ -200,7 +208,8 @@ def trace_graph(op_key: tuple, build: Callable[[TaskGraph], None]) -> TaskGraph:
     build(g)
     return run_pipeline(g, cfg.mode, cfg.resolved_cost_model(),
                         cfg.resolved_backend(),
-                        ablate_serialization=cfg.ablate_serialization)
+                        ablate_serialization=cfg.ablate_serialization,
+                        force_impl=cfg.force_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -1051,7 +1060,8 @@ def trace_region(fn: Callable, *args, **kwargs) -> TaskGraph:
     g = capture_region(fn, *args, **kwargs)
     return run_pipeline(g, cfg.mode, cfg.resolved_cost_model(),
                         cfg.resolved_backend(),
-                        ablate_serialization=cfg.ablate_serialization)
+                        ablate_serialization=cfg.ablate_serialization,
+                        force_impl=cfg.force_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -1477,6 +1487,20 @@ def cache_stats() -> dict:
 def cached_graphs() -> dict[tuple, TaskGraph]:
     """Optimized TaskGraphs by cache key (introspection for tests/bench)."""
     return dict(_GRAPHS)
+
+
+def explain(g: Optional[TaskGraph] = None) -> str:
+    """Human-readable schedule report: per library node, the impl the
+    registry chose, the full candidate cost table, tiles, and schedule
+    notes (``TaskGraph.dump_schedule``).  With no argument, reports every
+    graph compiled so far this process (the ``cached_graphs()`` table) —
+    run your model once, then print ``tapir.explain()`` to see why each
+    attention/GEMM/scan lowered the way it did, no debugger needed."""
+    if g is not None:
+        return g.dump_schedule()
+    if not _GRAPHS:
+        return "(no compiled graphs yet — run something under tapir first)"
+    return "\n".join(gr.dump_schedule() for gr in _GRAPHS.values())
 
 
 def clear_cache() -> None:

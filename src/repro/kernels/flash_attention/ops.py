@@ -126,3 +126,49 @@ def _bwd(causal, block_q, block_kv, res, do):
 
 
 flash_attention_vjp.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost descriptors (read by core.schedule's attention impl registry)
+# ---------------------------------------------------------------------------
+
+
+def attention_cost(b, sq, skv, h, hkv, d, eb, impl, block_kv=1024):
+    """Roofline terms for one candidate implementation of an attention node.
+
+    Returns ``dict(flops, io_bytes, score_bytes, copy_bytes, steps)``:
+
+    * ``flops``       — arithmetic work, identical across impls (the score
+                        and PV contractions; online-softmax rescales are
+                        second-order and folded in for blockwise);
+    * ``io_bytes``    — the unavoidable q/k/v/o streaming;
+    * ``score_bytes`` — ONE pass over the fp32 [B,H,Sq,Skv] score matrix.
+                        Impls that materialize it round-trip these bytes
+                        several times (the multiplier is a CostModel knob:
+                        a fused composite keeps score tiles VMEM-resident
+                        on the TPU target but still walks them through the
+                        cache hierarchy on a CPU); the flash kernel and the
+                        blockwise scan never leave VMEM/registers -> 0;
+    * ``copy_bytes``  — the GQA ``jnp.repeat`` K/V copy (repeat impl only);
+    * ``steps``       — serial dispatch count (the lax.scan trip count of
+                        the blockwise impl; the Cilk-style spawn-overhead
+                        analogue that makes blockwise LOSE on tiny shapes).
+    """
+    grp = max(h // max(hkv, 1), 1)
+    flops = 4.0 * b * h * sq * skv * d
+    io = eb * (2.0 * b * sq * h * d + 2.0 * b * skv * hkv * d)
+    score = 4.0 * b * h * sq * skv  # fp32 scores, one pass
+    out = dict(flops=flops, io_bytes=io, score_bytes=0.0, copy_bytes=0.0,
+               steps=0)
+    if impl in ("materialized_grouped", "materialized_repeat", "ref",
+                "opaque"):
+        out["score_bytes"] = score
+        if impl == "materialized_repeat" and grp > 1:
+            out["copy_bytes"] = 2.0 * (grp - 1) * b * skv * hkv * d * eb
+    elif impl == "blockwise":
+        bkv = max(1, min(block_kv, skv))
+        out["steps"] = -(-skv // bkv)
+        out["flops"] += 2.0 * b * h * sq * d * out["steps"]  # rescale+accum
+    elif impl != "flash_kernel":
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return out

@@ -97,3 +97,28 @@ def _bwd(epi_fns, out_dtype, res, dy):
 
 
 fused_matmul_vjp.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost descriptor (read by core.schedule's matmul impl registry)
+# ---------------------------------------------------------------------------
+
+
+def matmul_cost(batch, m, n, k, eb, impl, n_epilogue=0):
+    """Roofline terms for one candidate implementation of a matmul node:
+    ``dict(flops, io_bytes, steps)``.
+
+    The fused ``kernel`` runs the epilogue on the fp32 accumulator tile in
+    VMEM — extra operands stream once and the output writes once no matter
+    how long the fused tail is.  The plain ``einsum`` pays one extra
+    read+write of the output per epilogue stage (the traffic the
+    epilogue-fusion pass exists to delete)."""
+    flops = 2.0 * batch * m * n * k
+    io = eb * batch * (m * k + k * n + m * n)
+    if impl == "kernel":
+        return dict(flops=flops, io_bytes=io, steps=0)
+    if impl in ("einsum", "opaque"):
+        return dict(flops=flops,
+                    io_bytes=io + 2.0 * n_epilogue * eb * batch * m * n,
+                    steps=0)
+    raise ValueError(f"unknown matmul impl {impl!r}")

@@ -146,3 +146,31 @@ def _bwd(chunk, res, do):
 
 
 linear_scan_vjp.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost descriptors (read by core.schedule's linear_scan registry)
+# ---------------------------------------------------------------------------
+
+
+def scan_cost(b, seq, h, d_k, d_v, eb, impl, chunk=SAFE_CHUNK):
+    """Roofline terms for one candidate implementation of a linear_scan
+    node: ``dict(flops, io_bytes, steps)``.
+
+    ``steps`` is the serial trip count — the whole point of the chunked
+    form: ``ref`` carries the state across every timestep (seq steps),
+    ``chunked`` only across chunks (seq/chunk steps, each an MXU-friendly
+    [C,C] score block), and the Pallas ``kernel`` runs the chunk loop on
+    the TPU grid.  ``flops`` includes the factored intra-chunk score
+    matmul that the chunked forms add over the plain recurrence."""
+    flops = 8.0 * b * seq * h * d_v
+    io = eb * b * seq * h * (2.0 * d_k + 2.0 * d_v)
+    if impl == "ref":
+        return dict(flops=flops, io_bytes=io, steps=int(seq))
+    c = max(1, min(chunk, max(seq, 1)))
+    flops += 2.0 * b * h * (-(-seq // c)) * c * c * (d_k + d_v)
+    if impl == "chunked":
+        return dict(flops=flops, io_bytes=io, steps=int(-(-seq // c)))
+    if impl == "kernel":
+        return dict(flops=flops, io_bytes=io, steps=0)
+    raise ValueError(f"unknown linear_scan impl {impl!r}")

@@ -23,7 +23,8 @@ import numpy as np
 def check(out_dir: str, min_region_speedup: float = 1.5,
           min_decode_speedup: float = 1.3,
           min_serve_speedup: float = 1.3,
-          max_fault_overhead: float = 0.25) -> int:
+          max_fault_overhead: float = 0.25,
+          min_warm_ttft_speedup: float = 5.0) -> int:
     """Perf regression gate: run the two region benchmarks, the
     continuous-batching benchmark, the mesh-serving benchmark and the
     fault-recovery benchmark, and FAIL (non-zero exit) if
@@ -39,7 +40,10 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     with one injected failure, or kernel_vs_jnp's impl registry stops
     picking the measured-fastest attention impl on either gate shape
     (a long-KV decode where blockwise wins and a tiny prefill where the
-    materialized score matrix wins)."""
+    materialized score matrix wins), or program_cache_cold_vs_warm's
+    warm process compiles any XLA program / reaches its first token
+    slower than ``min_warm_ttft_speedup`` vs cold / stops matching the
+    cold run bitwise / quarantines entries on a clean cycle."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -54,6 +58,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_fault.json"))
     kv = kernel_bench.bench_kernel_vs_jnp(
         json_path=os.path.join(out_dir, "BENCH_kernel.json"))
+    cv = kernel_bench.bench_program_cache_cold_vs_warm(
+        json_path=os.path.join(out_dir, "BENCH_cache.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -100,6 +106,20 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
                 f"kernel_vs_jnp[{label}]: impl registry picked "
                 f"{shp['model_impl']} but {shp['measured_winner']} measured "
                 f"fastest")
+    if cv["warm_compiled"] != 0:
+        failures.append(f"program cache warm start compiled "
+                        f"{cv['warm_compiled']} programs (must be 0 — the "
+                        f"L2 store stopped hitting)")
+    if cv["ttft_speedup"] < min_warm_ttft_speedup:
+        failures.append(f"program cache warm-start ttft speedup "
+                        f"{cv['ttft_speedup']:.1f}x "
+                        f"< {min_warm_ttft_speedup}x")
+    if not cv["bitwise_match"]:
+        failures.append("warm-start serving no longer bitwise-matches the "
+                        "cold run (replayed executable drifted)")
+    if cv["quarantined"]:
+        failures.append(f"program cache quarantined {cv['quarantined']} "
+                        f"entries on a clean cold/warm cycle")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -110,7 +130,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           f"serve {sv['speedup']:.2f}x, mesh bitwise "
           f"({mv['mesh_annotated_nodes']} sharded nodes), fault recovery "
           f"{fv['overhead']*100:+.1f}% bitwise, donated, kernel_vs_jnp "
-          f"impl choice measured-correct on both shapes")
+          f"impl choice measured-correct on both shapes, warm start "
+          f"{cv['ttft_speedup']:.1f}x ttft with 0 compiles bitwise")
     return 0
 
 

@@ -1,0 +1,101 @@
+"""Cross-process stable digests for compiled-program cache keys.
+
+The in-memory caches in ``core.tapir`` key on python tuples — graph
+signatures, config tuples, mesh fingerprints.  Those tuples hash fine
+inside one process but are NOT portable: ``hash()`` is salted per process,
+and a few signature components (``pyfunc`` callables) repr with memory
+addresses.  ``stable_digest`` maps a key tuple to a sha256 hex string by
+type-tagged canonical encoding, so two processes that build structurally
+identical programs under identical configs land on the same on-disk entry.
+
+Encoding rules:
+
+* scalars encode as ``<tag>:<canonical text>`` — floats via ``repr`` (exact
+  shortest round-trip in py3), bytes raw.
+* containers encode recursively with length framing; dicts sort by encoded
+  key so insertion order never leaks into the digest.
+* numpy arrays encode shape + dtype + raw bytes.
+* callables (``pyfunc`` nodes, lifted composites) encode as
+  ``module.qualname`` **plus a hash of their bytecode** — the qualname is
+  the cross-process identity, the bytecode hash catches the function being
+  edited between runs (same name, different program: must miss).
+* dataclass-ish leaves (``TensorType``) encode via their fields.
+
+Anything unrecognized falls back to ``repr`` — if that repr embeds a
+memory address the digest differs per process, which degrades to a cache
+MISS, never a false hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import numpy as np
+
+
+def _encode(obj: Any, h) -> None:
+    if obj is None:
+        h.update(b"N;")
+    elif isinstance(obj, bool):
+        h.update(b"b:1;" if obj else b"b:0;")
+    elif isinstance(obj, int):
+        h.update(f"i:{obj};".encode())
+    elif isinstance(obj, float):
+        h.update(f"f:{obj!r};".encode())
+    elif isinstance(obj, str):
+        b = obj.encode()
+        h.update(f"s:{len(b)}:".encode())
+        h.update(b)
+        h.update(b";")
+    elif isinstance(obj, bytes):
+        h.update(f"y:{len(obj)}:".encode())
+        h.update(obj)
+        h.update(b";")
+    elif isinstance(obj, (tuple, list)):
+        h.update(f"t:{len(obj)}:".encode())
+        for v in obj:
+            _encode(v, h)
+        h.update(b";")
+    elif isinstance(obj, dict):
+        items = []
+        for k, v in obj.items():
+            hk = hashlib.sha256()
+            _encode(k, hk)
+            items.append((hk.digest(), k, v))
+        h.update(f"d:{len(items)}:".encode())
+        for _, k, v in sorted(items, key=lambda e: e[0]):
+            _encode(k, h)
+            _encode(v, h)
+        h.update(b";")
+    elif isinstance(obj, np.ndarray):
+        h.update(f"a:{obj.shape}:{obj.dtype.str}:".encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+        h.update(b";")
+    elif isinstance(obj, (np.integer, np.floating, np.bool_)):
+        _encode(obj.item(), h)
+    elif callable(obj):
+        mod = getattr(obj, "__module__", "?")
+        qual = getattr(obj, "__qualname__", getattr(obj, "__name__", "?"))
+        code = getattr(obj, "__code__", None)
+        co = code.co_code if code is not None else b""
+        h.update(f"c:{mod}.{qual}:".encode())
+        h.update(hashlib.sha256(co).digest())
+        h.update(b";")
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(f"D:{type(obj).__name__}:".encode())
+        for f in dataclasses.fields(obj):
+            _encode(f.name, h)
+            _encode(getattr(obj, f.name), h)
+        h.update(b";")
+    else:
+        # last resort: repr.  A repr embedding a memory address digests
+        # differently per process — a guaranteed miss, never a false hit.
+        _encode(f"r:{type(obj).__name__}:{obj!r}", h)
+
+
+def stable_digest(obj: Any) -> str:
+    """sha256 hex digest of ``obj`` under the canonical encoding above."""
+    h = hashlib.sha256()
+    _encode(obj, h)
+    return h.hexdigest()

@@ -1,0 +1,306 @@
+"""On-disk L2 tier of the compiled-program cache.
+
+Layout (one pair of files per program, content-addressed by key digest)::
+
+    <root>/v1/<dd>/<digest>.bin     # pickled (payload, in_tree, out_tree)
+    <root>/v1/<dd>/<digest>.json    # sidecar: provenance + integrity
+    <root>/quarantine/              # entries that failed verification
+
+``<dd>`` is the first two hex chars of the digest (fan-out so a fleet-sized
+cache never puts 10k files in one directory).
+
+Write protocol (same discipline as ``checkpoint/ckpt.py``: stage + atomic
+rename, readers never observe a torn entry):
+
+1. payload staged to ``<digest>.bin.tmp-<pid>-<nonce>`` then
+   ``os.replace``d to final — rename is atomic on POSIX, so two replicas
+   racing to publish the same key both succeed and the last rename wins;
+   both wrote byte-identical content (same key => same program), so there
+   is exactly one durable winner and no torn state.
+2. sidecar staged + renamed AFTER the payload.  A reader requires the
+   sidecar, so a visible sidecar implies a visible payload.
+
+Read protocol (**quarantine-and-recompile**: a cache problem may cost a
+compile, never correctness):
+
+* sidecar missing / unparsable          -> miss (in-progress write) or
+  quarantine (parse error)
+* format / jax / jaxlib / pipeline-salt
+  mismatch                              -> version skew: quarantine, miss
+* payload missing, short, or sha256
+  mismatch vs the sidecar               -> corruption: quarantine, miss
+* unpickling fails                      -> corruption: quarantine, miss
+
+Quarantined entries are RENAMED into ``quarantine/`` (never deleted — a
+fleet operator can post-mortem them) and are never probed again: ``get``
+only looks under ``v1/``.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import pickle
+import shutil
+import uuid
+from typing import Any, Optional
+
+FORMAT_VERSION = 1
+
+#: Pipeline semantics salt.  Part of every L2 key: any PR that changes what
+#: the pass pipeline / lowering emits for the same graph signature MUST
+#: bump this, or old entries would replay stale programs.  (The jax/jaxlib
+#: versions are keyed separately — this covers *our* compiler.)
+PIPELINE_VERSION = "repro-pipeline-8"
+
+
+def _versions() -> dict:
+    import jax
+    import jaxlib
+    return {"jax": jax.__version__, "jaxlib": jaxlib.__version__,
+            "pipeline": PIPELINE_VERSION, "format": FORMAT_VERSION}
+
+
+_XLA_CACHE_ENABLED = False
+
+
+def enable_xla_disk_cache(root: str) -> None:
+    """Point jax's own persistent compilation cache at ``<root>/xla``.
+
+    The L2 store covers region programs (the big AOT executables), but a
+    cold process also pays dozens of small XLA compiles our tier never
+    sees: eager primitive dispatches (zeros-init, indexing, argmax) and
+    outer-jit wrappers whose inputs are tracers.  jax already knows how to
+    persist those — keyed on its own HLO fingerprint + jaxlib version — so
+    a cache-enabled process gets both tiers warm from one directory tree.
+    First configuration wins; never overrides a user-set cache dir."""
+    global _XLA_CACHE_ENABLED
+    if _XLA_CACHE_ENABLED:
+        return
+    import jax
+    try:
+        if jax.config.jax_compilation_cache_dir:   # user already chose one
+            _XLA_CACHE_ENABLED = True
+            return
+        jax.config.update("jax_compilation_cache_dir",
+                          os.path.join(root, "xla"))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        # the cache-used probe is sticky: once any compile ran (backend
+        # init, param setup) the "no cache dir" verdict is latched — reset
+        # so the next compile re-reads the config and opens our dir
+        from jax._src import compilation_cache
+        compilation_cache.reset_cache()
+        _XLA_CACHE_ENABLED = True
+    except Exception:
+        pass    # older jax without the knobs: L2 still works alone
+
+
+@contextlib.contextmanager
+def suspend_xla_disk_cache():
+    """Run a compile OUTSIDE jax's persistent compilation cache.
+
+    Region programs are AOT-compiled and published to the L2 program
+    store, so letting jax's own cache also serve that compile is not just
+    redundant — it poisons L2: an executable *loaded from* the XLA cache
+    re-``serialize``s on CPU to a blob whose jitted fusion symbols are
+    gone ("Symbols not found: [ divide_multiply_fusion ]" at the next
+    ``deserialize_and_load``).  The cache-used verdict is latched, so
+    disabling means flipping the flag AND resetting the latch on both
+    edges; the on-disk entries are untouched, only the verdict re-reads
+    the config."""
+    import jax
+    try:
+        from jax._src import compilation_cache
+        active = (jax.config.jax_compilation_cache_dir
+                  and jax.config.jax_enable_compilation_cache)
+    except Exception:
+        active = False
+    if not active:
+        yield
+        return
+    jax.config.update("jax_enable_compilation_cache", False)
+    compilation_cache.reset_cache()
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_compilation_cache", True)
+        compilation_cache.reset_cache()
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Stage-and-rename write: concurrent readers see the old file or the
+    new file, never a prefix."""
+    tmp = f"{path}.tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    atomic_write_bytes(path, json.dumps(obj, indent=1, sort_keys=True,
+                                        default=str).encode())
+
+
+class ProgramDiskCache:
+    """Content-addressed store for serialized AOT executables.
+
+    ``mode``: ``"off"`` (every call a no-op), ``"read"`` (probe but never
+    publish), ``"readwrite"``.  All verification failures increment
+    ``stats["quarantined"]`` and move the entry aside; ``get`` then reports
+    a miss so the caller recompiles.
+    """
+
+    def __init__(self, root: str, mode: str = "readwrite"):
+        if mode not in ("off", "read", "readwrite"):
+            raise ValueError(f"cache_mode must be off|read|readwrite, "
+                             f"got {mode!r}")
+        self.root = root
+        self.mode = mode
+        self.stats = {"hits": 0, "misses": 0, "quarantined": 0, "writes": 0}
+
+    # -- paths ------------------------------------------------------------
+    @property
+    def store_dir(self) -> str:
+        return os.path.join(self.root, "v1")
+
+    @property
+    def quarantine_dir(self) -> str:
+        return os.path.join(self.root, "quarantine")
+
+    def entry_paths(self, digest: str) -> tuple[str, str]:
+        d = os.path.join(self.store_dir, digest[:2])
+        return (os.path.join(d, f"{digest}.bin"),
+                os.path.join(d, f"{digest}.json"))
+
+    # -- quarantine -------------------------------------------------------
+    def quarantine(self, digest: str, reason: str) -> None:
+        """Move a bad entry aside (never deleted, never re-read)."""
+        os.makedirs(self.quarantine_dir, exist_ok=True)
+        nonce = uuid.uuid4().hex[:8]
+        for path in self.entry_paths(digest):
+            if os.path.exists(path):
+                dst = os.path.join(
+                    self.quarantine_dir,
+                    f"{os.path.basename(path)}.{reason}.{nonce}")
+                try:
+                    os.replace(path, dst)
+                except OSError:
+                    pass
+        self.stats["quarantined"] += 1
+
+    # -- read -------------------------------------------------------------
+    def get(self, digest: str) -> Optional[tuple[Any, dict]]:
+        """Verified read: ``(unpickled payload, sidecar meta)`` or None.
+
+        The payload object is whatever ``put`` pickled (for program
+        entries: ``(serialized_executable, in_tree, out_tree)``).  Any
+        integrity or version failure quarantines the entry and returns
+        None — the caller's only fallback is a clean recompile.
+        """
+        if self.mode == "off":
+            return None
+        bin_path, json_path = self.entry_paths(digest)
+        if not os.path.exists(json_path):
+            self.stats["misses"] += 1
+            return None
+        try:
+            with open(json_path, "rb") as f:
+                meta = json.loads(f.read().decode())
+        except (OSError, ValueError, UnicodeDecodeError):
+            self.quarantine(digest, "sidecar-unreadable")
+            self.stats["misses"] += 1
+            return None
+        want = _versions()
+        got = {k: meta.get(k) for k in want}
+        if got != want or meta.get("key_digest") != digest:
+            self.quarantine(digest, "version-skew")
+            self.stats["misses"] += 1
+            return None
+        try:
+            with open(bin_path, "rb") as f:
+                raw = f.read()
+        except OSError:
+            self.quarantine(digest, "payload-missing")
+            self.stats["misses"] += 1
+            return None
+        if (len(raw) != meta.get("payload_bytes")
+                or hashlib.sha256(raw).hexdigest()
+                != meta.get("payload_sha256")):
+            self.quarantine(digest, "payload-corrupt")
+            self.stats["misses"] += 1
+            return None
+        try:
+            payload = pickle.loads(raw)
+        except Exception:
+            self.quarantine(digest, "unpickle-failed")
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return payload, meta
+
+    # -- write ------------------------------------------------------------
+    def put(self, digest: str, payload_obj: Any,
+            meta: Optional[dict] = None) -> bool:
+        """Transactional publish; returns False in read/off modes."""
+        if self.mode != "readwrite":
+            return False
+        raw = pickle.dumps(payload_obj, protocol=pickle.HIGHEST_PROTOCOL)
+        bin_path, json_path = self.entry_paths(digest)
+        os.makedirs(os.path.dirname(bin_path), exist_ok=True)
+        sidecar = dict(meta or {})
+        sidecar.update(_versions(), key_digest=digest,
+                       payload_sha256=hashlib.sha256(raw).hexdigest(),
+                       payload_bytes=len(raw))
+        atomic_write_bytes(bin_path, raw)        # payload first,
+        atomic_write_json(json_path, sidecar)    # sidecar commits the entry
+        self.stats["writes"] += 1
+        return True
+
+    # -- maintenance ------------------------------------------------------
+    def entries(self) -> list[tuple[str, dict]]:
+        """(digest, sidecar meta) for every committed entry."""
+        out = []
+        if not os.path.isdir(self.store_dir):
+            return out
+        for dd in sorted(os.listdir(self.store_dir)):
+            d = os.path.join(self.store_dir, dd)
+            if not os.path.isdir(d):
+                continue
+            for name in sorted(os.listdir(d)):
+                if not name.endswith(".json"):
+                    continue
+                try:
+                    with open(os.path.join(d, name)) as f:
+                        meta = json.load(f)
+                except (OSError, ValueError):
+                    continue
+                out.append((name[:-len(".json")], meta))
+        return out
+
+    def invalidate(self, fingerprint: tuple) -> int:
+        """Purge every entry compiled under mesh ``fingerprint`` (recorded
+        in the sidecar).  A purged fingerprint cannot be resurrected: both
+        files are removed, not quarantined — this is an intentional
+        invalidation, not a fault."""
+        fp = [list(p) for p in fingerprint]     # JSON round-trip form
+        n = 0
+        for digest, meta in self.entries():
+            if meta.get("mesh_fingerprint") == fp:
+                for path in self.entry_paths(digest):
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass
+                n += 1
+        return n
+
+    def clear(self) -> int:
+        """Drop every committed entry (quarantine is kept for post-mortem).
+        Returns the number of entries removed."""
+        n = len(self.entries())
+        shutil.rmtree(self.store_dir, ignore_errors=True)
+        return n

@@ -30,6 +30,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.cache.disk import atomic_write_json
+
 
 def _flatten(tree) -> dict[str, Any]:
     flat = {}
@@ -98,8 +100,9 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *, host_id: int = 0,
         }
         for h in range(n_hosts):
             os.remove(os.path.join(tmp, f"done_{h:05d}"))
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        # stage-and-rename even inside the staging dir: a reader that races
+        # the final rename can trust any manifest it can open
+        atomic_write_json(os.path.join(tmp, "manifest.json"), manifest)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)

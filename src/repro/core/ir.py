@@ -380,18 +380,71 @@ class TaskGraph:
     def total_flops(self) -> float:
         return sum(n.flops() for n in self.nodes.values())
 
+    def _signature_order(self) -> list[int]:
+        """Deterministic node order for ``signature``: the same DFS as
+        ``topo_order`` but with anti deps visited in sorted order.  ``anti``
+        tuples come from set iteration, whose order can differ between two
+        structurally identical graphs whose nids were merely renumbered —
+        sorting makes the canonical numbering (and therefore the signature)
+        invariant under monotonic renumbering and insertion order."""
+        seen: set[int] = set()
+        order: list[int] = []
+        for out in self.outputs:
+            if out in seen:
+                continue
+            stack: list[tuple[int, bool]] = [(out, False)]
+            while stack:
+                nid, expanded = stack.pop()
+                if expanded:
+                    order.append(nid)
+                    continue
+                if nid in seen:
+                    continue
+                seen.add(nid)
+                stack.append((nid, True))
+                node = self.nodes[nid]
+                deps = list(node.inputs)
+                for _, extra, _ in node.epilogue:
+                    deps.extend(extra)
+                deps.extend(sorted(node.anti))
+                for i in reversed(deps):
+                    if i not in seen:
+                        stack.append((i, False))
+        return order
+
     def signature(self) -> tuple:
-        """Hashable structural signature (for the lowering cache).  The
-        bound ``schedule.impl`` participates: two graphs that scheduled the
-        same node to different implementations lower differently and must
-        not share a cache entry (raw pre-schedule graphs carry "" and are
-        unaffected)."""
+        """Hashable structural signature (for the lowering cache and the
+        on-disk program cache).  The bound ``schedule.impl`` participates:
+        two graphs that scheduled the same node to different
+        implementations lower differently and must not share a cache entry
+        (raw pre-schedule graphs carry "" and are unaffected).  Node ids
+        are CANONICALIZED to positions in a deterministic traversal, so the
+        signature is a pure function of graph *structure*: renumbering the
+        nids or inserting (then pruning) unrelated nodes cannot change it,
+        while any change to an op, attr, sharding, aliasing, epilogue or
+        impl choice must."""
+        order = self._signature_order()
+        pos = {nid: i for i, nid in enumerate(order)}
         parts = []
-        for nid in self.topo_order():
+        for nid in order:
             n = self.nodes[nid]
-            parts.append((n.key(), n.anti, n.schedule.impl,
-                          tuple((fn, extra, _freeze(a)) for fn, extra, a in n.epilogue)))
-        return (self.name, tuple(parts), tuple(self.outputs),
+            frozen_attrs = tuple(sorted((k, _freeze(v))
+                                        for k, v in n.attrs.items()))
+            parts.append((
+                n.op,
+                tuple(pos[i] for i in n.inputs),
+                n.ttype,
+                frozen_attrs,
+                n.pdims,
+                n.rdims,
+                None if n.donates is None else pos[n.donates],
+                n.sharding,
+                tuple(sorted(pos[i] for i in n.anti)),
+                n.schedule.impl,
+                tuple((fn, tuple(pos[i] for i in extra), _freeze(a))
+                      for fn, extra, a in n.epilogue),
+            ))
+        return (self.name, tuple(parts), tuple(pos[o] for o in self.outputs),
                 tuple(n for n, _ in self.inputs))
 
     def dump_schedule(self) -> str:

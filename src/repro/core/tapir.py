@@ -92,6 +92,19 @@ class TapirConfig:
     # the compile-cache key).  Unknown or unavailable names raise at
     # schedule time.
     force_impl: Optional[tuple] = None
+    # persistent program cache (L2): directory for the on-disk tier under
+    # the in-memory caches.  None disables it.  A region program that
+    # misses L1 probes L2 by content digest (graph signature + _cfg_key +
+    # jax/jaxlib versions + pipeline salt) and, on a verified hit,
+    # deserializes the AOT executable instead of compiling — a second
+    # process on a warm directory compiles 0 programs.  NOT part of
+    # ``_cfg_key``: where an artifact is stored never changes what it
+    # computes.
+    program_cache_dir: Optional[str] = None
+    # "off" | "read" | "readwrite" — "read" probes but never publishes
+    # (immutable fleet-shared cache), "readwrite" also publishes fresh
+    # compiles.  Ignored while ``program_cache_dir`` is None.
+    cache_mode: str = "readwrite"
 
     def resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -129,9 +142,26 @@ def use(cfg: TapirConfig):
 # ---------------------------------------------------------------------------
 
 _CACHE: dict[tuple, Callable] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0, "pipeline_s": 0.0}
+_CACHE_STATS = {
+    "hits": 0, "misses": 0, "pipeline_s": 0.0,
+    # region programs actually XLA-compiled this process (the warm-start
+    # gate asserts this stays 0 on a populated cache directory)
+    "compiled_programs": 0,
+    # L2 (on-disk) tier outcomes, summed over every active cache dir
+    "l2_hits": 0, "l2_misses": 0, "l2_quarantined": 0, "l2_writes": 0,
+    # deserialized executables that failed at call time and were replaced
+    # by a fresh compile (cache problem degraded to a compile, not a wrong
+    # answer)
+    "l2_fallbacks": 0,
+}
 #: optimized graphs by cache key — introspection for tests/benchmarks
 _GRAPHS: dict[tuple, TaskGraph] = {}
+#: per-program cache provenance (where each L1 entry came from), keyed
+#: like ``_CACHE`` — surfaced by ``tapir.explain``
+_PROVENANCE: dict[tuple, dict] = {}
+#: ProgramDiskCache instances by (dir, mode) — shared so stats accumulate
+#: and ``invalidate_mesh`` can purge every active disk tier
+_L2_INSTANCES: dict[tuple, Any] = {}
 
 
 def _tt(x) -> TensorType:
@@ -151,34 +181,213 @@ def _cfg_key(cfg: TapirConfig, backend: str) -> tuple:
             cfg.force_impl, mesh_fingerprint())
 
 
+def _l2_for(cfg: TapirConfig):
+    """Active on-disk tier for this config, or None when disabled."""
+    if not cfg.program_cache_dir or cfg.cache_mode == "off":
+        return None
+    from repro.cache import ProgramDiskCache, enable_xla_disk_cache
+    k = (cfg.program_cache_dir, cfg.cache_mode)
+    l2 = _L2_INSTANCES.get(k)
+    if l2 is None:
+        l2 = ProgramDiskCache(cfg.program_cache_dir, cfg.cache_mode)
+        _L2_INSTANCES[k] = l2
+        if cfg.cache_mode == "readwrite":
+            # warm the small compiles too (eager dispatches, outer jits)
+            enable_xla_disk_cache(cfg.program_cache_dir)
+    return l2
+
+
+def _l2_digest(key: tuple) -> str:
+    """Cross-process content digest of an L1 cache key: the canonical graph
+    signature + full ``_cfg_key`` (mode/backend/cost model/force_impl/mesh
+    fingerprint) the key already carries, salted with the jax/jaxlib
+    versions and the repro pipeline version (``cache.PIPELINE_VERSION``) —
+    an artifact compiled by a different compiler must never hit."""
+    import jaxlib
+
+    from repro.cache import FORMAT_VERSION, PIPELINE_VERSION, stable_digest
+    return stable_digest(("tapir-program", FORMAT_VERSION, PIPELINE_VERSION,
+                          jax.__version__, jaxlib.__version__, key))
+
+
+def _positional_jit(emitted: Callable, g: TaskGraph):
+    """(jitted, input names): jit the emitted fn positionally so
+    ``donate_argnums`` can name exactly the cache inputs the graph's
+    update-slice nodes donate — XLA then aliases input and output storage
+    (no per-step cache copy)."""
+    names = [n for n, _ in g.inputs]
+    donated = g.donated_inputs()
+    don_names = {n for n, nid in g.inputs if nid in donated}
+    pos = tuple(i for i, n in enumerate(names) if n in don_names)
+
+    def _positional(*argv):
+        return emitted(dict(zip(names, argv)))
+
+    return jax.jit(_positional, donate_argnums=pos), names
+
+
+def _guarded_aot(compiled, names: list, fallback: Callable) -> Callable:
+    """Dict-convention wrapper over an AOT executable with a one-shot
+    degrade path: if the executable rejects a call (input layout/sharding
+    drift the lazy jit would have absorbed by recompiling), swap in
+    ``fallback()`` — a cache problem may cost a compile, never an answer.
+    The retry is skipped if any argument was already consumed by donation
+    (the failure happened mid-execution, not at dispatch)."""
+    cell: dict[str, Any] = {}
+
+    def fn(inputs: dict):
+        if "call" in cell:
+            return cell["call"](inputs)
+        argv = [inputs[n] for n in names]
+        try:
+            return compiled(*argv)
+        except Exception:
+            if any(getattr(a, "is_deleted", lambda: False)() for a in argv):
+                raise
+            _CACHE_STATS["l2_fallbacks"] += 1
+            cell["call"] = fallback()
+            return cell["call"](inputs)
+
+    return fn
+
+
+def _l2_load(l2, digest: str, g: TaskGraph, cfg: TapirConfig, backend: str,
+             key: tuple, example_inputs: dict) -> Optional[Callable]:
+    """Verified L2 probe: deserialize the AOT executable and rebuild the
+    replay callable from the sidecar (input-name order + recorded avals).
+    Every failure past the probe quarantines the entry and returns None —
+    the caller recompiles."""
+    q0 = l2.stats["quarantined"]
+    got = l2.get(digest)
+    _CACHE_STATS["l2_quarantined"] += l2.stats["quarantined"] - q0
+    if got is None:
+        _CACHE_STATS["l2_misses"] += 1
+        return None
+    payload, meta = got
+    try:
+        from jax.experimental.serialize_executable import \
+            deserialize_and_load
+        blob, in_tree, out_tree = payload
+        names = [str(n) for n in meta["input_names"]]
+        for n, (shape, dtype) in zip(names, meta["in_avals"]):
+            v = example_inputs[n]
+            if (tuple(shape) != tuple(v.shape)
+                    or str(dtype) != str(jnp.dtype(v.dtype))):
+                raise ValueError(f"aval mismatch on input {n}")
+        compiled = deserialize_and_load(blob, in_tree, out_tree)
+    except Exception:
+        l2.quarantine(digest, "deserialize-failed")
+        _CACHE_STATS["l2_quarantined"] += 1
+        _CACHE_STATS["l2_misses"] += 1
+        return None
+    _CACHE_STATS["l2_hits"] += 1
+
+    def fallback(g=g, cfg=cfg, backend=backend):
+        # full clean recompile from the RAW captured graph (the pipeline
+        # never ran on the hit path, so g is intact)
+        g2 = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
+                          ablate_serialization=cfg.ablate_serialization,
+                          force_impl=cfg.force_impl)
+        jitted, names2 = _positional_jit(
+            emit(g2, backend, bf16_partials=cfg.bf16_partials), g2)
+        _CACHE_STATS["compiled_programs"] += 1
+        return lambda inputs: jitted(*[inputs[n] for n in names2])
+
+    _PROVENANCE[key] = {"name": g.name, "source": "disk", "digest": digest,
+                        "backend": backend,
+                        "mesh_fingerprint": mesh_fingerprint()}
+    return _guarded_aot(compiled, names, fallback)
+
+
+def _l2_publish(l2, digest: str, compiled, g: TaskGraph, names: list,
+                example_inputs: dict, backend: str) -> bool:
+    """Serialize + transactionally publish a freshly compiled program with
+    its provenance sidecar.  Publish failures are non-fatal: the compile
+    already succeeded, the process just serves uncached."""
+    try:
+        from jax.experimental.serialize_executable import (
+            deserialize_and_load, serialize)
+        blob, in_tree, out_tree = serialize(compiled)
+        # publish-time self-check: a blob we cannot load back is poison
+        # for every future process — skip publishing it (backstop for
+        # serialize-of-deserialized-executable bugs in the runtime)
+        deserialize_and_load(blob, in_tree, out_tree)
+        meta = {
+            "graph_name": g.name,
+            "backend": backend,
+            "mesh_fingerprint": [list(p) for p in mesh_fingerprint()],
+            "input_names": list(names),
+            "in_avals": [[list(example_inputs[n].shape),
+                          str(jnp.dtype(example_inputs[n].dtype))]
+                         for n in names],
+            "donated_inputs": [n for n, nid in g.inputs
+                               if nid in g.donated_inputs()],
+            "n_nodes": len(g.nodes),
+            "impls": sorted({nd.schedule.impl for nd in g.nodes.values()
+                             if nd.schedule.impl}),
+            "created_at": time.time(),
+        }
+        ok = l2.put(digest, (blob, in_tree, out_tree), meta)
+        if ok:
+            _CACHE_STATS["l2_writes"] += 1
+        return ok
+    except Exception:
+        return False
+
+
 def _compile(g: TaskGraph, cfg: TapirConfig, backend: str,
-             key: tuple, jit: bool = False) -> Callable:
-    """pipeline + emit with cache bookkeeping (shared by per-op + region)."""
+             key: tuple, jit: bool = False,
+             example_inputs: Optional[dict] = None) -> Callable:
+    """pipeline + emit with cache bookkeeping (shared by per-op + region).
+
+    For region programs (``jit=True``) called with concrete inputs, this is
+    also the L2 integration point: probe the on-disk tier BEFORE running
+    the pass pipeline (a verified hit skips pipeline + emit + XLA compile
+    entirely), and publish fresh compiles after AOT-compiling against the
+    example inputs.  Tracer inputs (region nested under an outer jit)
+    bypass L2 — there is nothing concrete to AOT against."""
     t0 = time.perf_counter()
+    l2 = None
+    if jit and example_inputs is not None and not any(
+            isinstance(v, jax.core.Tracer) for v in example_inputs.values()):
+        l2 = _l2_for(cfg)
+    digest = None
+    if l2 is not None:
+        digest = _l2_digest(key)
+        raw_g = g
+        fn = _l2_load(l2, digest, raw_g, cfg, backend, key, example_inputs)
+        if fn is not None:
+            _CACHE_STATS["pipeline_s"] += time.perf_counter() - t0
+            _CACHE[key] = fn
+            return fn
     g = run_pipeline(g, cfg.mode, cfg.resolved_cost_model(), backend,
                      ablate_serialization=cfg.ablate_serialization,
                      force_impl=cfg.force_impl)
     fn = emit(g, backend, bf16_partials=cfg.bf16_partials)
     if jit:
-        donated = g.donated_inputs()
-        if donated:
-            # in-place buffer writes: jit positionally so donate_argnums can
-            # name exactly the cache inputs the graph's update-slice nodes
-            # donate — XLA then aliases input and output storage (no
-            # per-step cache copy).  The dict calling convention is kept by
-            # the thin rebind wrapper.
-            names = [n for n, _ in g.inputs]
-            don_names = {n for n, nid in g.inputs if nid in donated}
-            pos = tuple(i for i, n in enumerate(names) if n in don_names)
-            raw = fn
-
-            def _positional(*argv):
-                return raw(dict(zip(names, argv)))
-
-            jitted = jax.jit(_positional, donate_argnums=pos)
-            fn = lambda inputs: jitted(*[inputs[n] for n in names])  # noqa: E731
+        _CACHE_STATS["compiled_programs"] += 1
+        jitted, names = _positional_jit(fn, g)
+        if l2 is not None:
+            from repro.cache import suspend_xla_disk_cache
+            argv = [example_inputs[n] for n in names]
+            # compile OUTSIDE jax's persistent cache: an executable loaded
+            # from it re-serializes to a broken blob on CPU, and L2 is the
+            # canonical tier for region programs anyway
+            with suspend_xla_disk_cache():
+                compiled = jitted.lower(*argv).compile()
+            published = _l2_publish(l2, digest, compiled, g, names,
+                                    example_inputs, backend)
+            _PROVENANCE[key] = {
+                "name": g.name, "digest": digest, "backend": backend,
+                "source": "compiled+published" if published else "compiled",
+                "mesh_fingerprint": mesh_fingerprint()}
+            # the lazy jit is the degrade path: it recompiles transparently
+            # if a later call's input layout drifts from the AOT avals
+            fn = _guarded_aot(
+                compiled, names,
+                lambda: lambda inputs: jitted(*[inputs[n] for n in names]))
         else:
-            fn = jax.jit(fn)
+            fn = lambda inputs: jitted(*[inputs[n] for n in names])  # noqa: E731
     _CACHE_STATS["pipeline_s"] += time.perf_counter() - t0
     _GRAPHS[key] = g
     _CACHE[key] = fn
@@ -609,14 +818,15 @@ class _Region:
         self.g.set_outputs([h.nid for h in outs])
         cfg, backend = self.cfg, self.cfg.resolved_backend()
         key = ("region", self.g.signature()) + _cfg_key(cfg, backend)
+        inputs = {f"a{i}": v for i, v in enumerate(self._inp_vals)}
         fn = _CACHE.get(key)
         if fn is None:
             _CACHE_STATS["misses"] += 1
-            fn = _compile(self.g, cfg, backend, key, jit=True)
+            fn = _compile(self.g, cfg, backend, key, jit=True,
+                          example_inputs=inputs)
         else:
             _CACHE_STATS["hits"] += 1
         self._last_fn = fn
-        inputs = {f"a{i}": v for i, v in enumerate(self._inp_vals)}
         results = fn(inputs)
         for h, r in zip(outs, results):
             h._concrete = r
@@ -1498,29 +1708,57 @@ def explain(g: Optional[TaskGraph] = None) -> str:
     attention/GEMM/scan lowered the way it did, no debugger needed."""
     if g is not None:
         return g.dump_schedule()
-    if not _GRAPHS:
+    if not _GRAPHS and not _PROVENANCE:
         return "(no compiled graphs yet — run something under tapir first)"
-    return "\n".join(gr.dump_schedule() for gr in _GRAPHS.values())
+    parts = [gr.dump_schedule() for gr in _GRAPHS.values()]
+    if _PROVENANCE:
+        lines = ["== program cache provenance =="]
+        for info in _PROVENANCE.values():
+            lines.append(
+                f"  {info['name']}: {info['source']} "
+                f"digest={info['digest'][:12]} backend={info['backend']}")
+        parts.append("\n".join(lines))
+    return "\n".join(parts)
+
+
+def program_cache(cfg: Optional[TapirConfig] = None):
+    """The active on-disk L2 ``ProgramDiskCache`` for ``cfg`` (default: the
+    current config), or None when disabled.  Exposes explicit maintenance
+    entry points — ``clear()`` and ``invalidate(fingerprint)`` — that the
+    in-memory ``clear_cache()`` deliberately does NOT call: clearing L1 is
+    a per-process action, purging L2 is a store-wide one."""
+    return _l2_for(cfg or get_config())
 
 
 def clear_cache() -> None:
+    """Drop the in-memory (L1) tier only.  The on-disk L2 store is
+    untouched — use ``program_cache().clear()`` / ``.invalidate(fp)`` for
+    store-wide maintenance, or ``invalidate_mesh`` which purges both."""
     _CACHE.clear()
     _GRAPHS.clear()
     _PROGRAMS.clear()
-    _CACHE_STATS.update(hits=0, misses=0, pipeline_s=0.0)
+    _PROVENANCE.clear()
+    _CACHE_STATS.update(hits=0, misses=0, pipeline_s=0.0,
+                        compiled_programs=0, l2_hits=0, l2_misses=0,
+                        l2_quarantined=0, l2_writes=0, l2_fallbacks=0)
 
 
 def invalidate_mesh(fingerprint: tuple) -> int:
     """Drop every cached program/graph compiled under ``fingerprint``.
 
-    All three caches' keys end with ``mesh_fingerprint()`` (it is the last
-    component of ``_cfg_key``), so a mesh that left the job — a host
+    All in-memory caches' keys end with ``mesh_fingerprint()`` (it is the
+    last component of ``_cfg_key``), so a mesh that left the job — a host
     evicted mid-serve — can be purged without touching programs compiled
-    for other meshes.  Returns the number of evicted entries."""
+    for other meshes.  Every attached on-disk L2 store is purged too (the
+    sidecar records the fingerprint), so a dead mesh's programs cannot
+    resurrect from disk in a later process.  Returns the number of evicted
+    entries (memory + disk)."""
     n = 0
-    for cache in (_CACHE, _GRAPHS, _PROGRAMS):
+    for cache in (_CACHE, _GRAPHS, _PROGRAMS, _PROVENANCE):
         dead = [k for k in cache if k and k[-1] == fingerprint]
         for k in dead:
             del cache[k]
         n += len(dead)
+    for l2 in _L2_INSTANCES.values():
+        n += l2.invalidate(fingerprint)
     return n

@@ -44,6 +44,11 @@ def main(argv=None):
                     metavar="STEP", help="start straggling at this step")
     ap.add_argument("--straggle-delay", type=float, default=0.05)
     ap.add_argument("--straggle-repeat", type=int, default=8)
+    ap.add_argument("--program-cache-dir", default=None,
+                    help="persistent compiled-program store (L2); a warm "
+                         "dir makes restarts compile zero XLA programs")
+    ap.add_argument("--cache-mode", default="readwrite",
+                    choices=["off", "read", "readwrite"])
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -71,7 +76,9 @@ def main(argv=None):
                         cfg=ServeConfig(mode=args.mode, target="cpu",
                                         fault_injector=injector,
                                         ckpt_dir=args.ckpt_dir,
-                                        ckpt_every=args.ckpt_every))
+                                        ckpt_every=args.ckpt_every,
+                                        program_cache_dir=args.program_cache_dir,
+                                        cache_mode=args.cache_mode))
     t0 = time.time()
     out = eng.run(reqs)
     dt = time.time() - t0
@@ -83,10 +90,15 @@ def main(argv=None):
         "tok_per_s": total_new / max(dt, 1e-9),
         "sample_out": out[0].out[:8],
     }
+    if args.program_cache_dir:
+        report["cache"] = {k: st.get(k, 0) for k in
+                           ("compiled_programs", "l2_hits", "l2_misses",
+                            "l2_quarantined", "l2_writes")}
     if injector is not None or args.ckpt_dir:
         report["fault"] = {k: st.get(k, 0) for k in
                            ("failures", "restores", "checkpoints",
                             "shed_rounds", "straggler_steps")}
+        report["fault"]["l2_quarantined"] = st.get("l2_quarantined", 0)
         report["step_p95_ms"] = round(st.get("step_p95", 0.0) * 1e3, 3)
     print(json.dumps(report))
     return out

@@ -59,7 +59,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
 from repro.core.schedule import CPU_COST_MODEL, CostModel
-from repro.core.tapir import TapirConfig, invalidate_mesh, use
+from repro.core.tapir import (TapirConfig, cache_stats, invalidate_mesh,
+                              use)
 from repro.dist.fault import Fault, FaultInjector, StragglerWatchdog
 from repro.dist.sharding import (batch_pspec, logical_to_pspec,
                                  param_shardings)
@@ -105,11 +106,25 @@ class ServeConfig:
     #: shed rounds with straggle persisting before the suspect host is
     #: evicted (checkpoint -> mesh shrink -> restore)
     straggle_escalate: int = 3
+    # -- persistent program cache (L2; see ``repro.cache``) ---------------
+    #: on-disk compiled-program store; None serves memory-only (every
+    #: process pays its own XLA compiles)
+    program_cache_dir: Optional[str] = None
+    #: "off" | "read" (probe, never publish — replicas behind a shared
+    #: read-only store) | "readwrite"
+    cache_mode: str = "readwrite"
 
     def tapir_config(self) -> TapirConfig:
+        if self.program_cache_dir and self.cache_mode == "readwrite":
+            # before any eager dispatch of the run: the small-compile tier
+            # (jax's own persistent cache) only helps ops compiled after it
+            from repro.cache import enable_xla_disk_cache
+            enable_xla_disk_cache(self.program_cache_dir)
         cm = CostModel() if self.target == "tpu" else CPU_COST_MODEL
         return TapirConfig(mode=self.mode, cost_model=cm,
-                           regions=self.regions)
+                           regions=self.regions,
+                           program_cache_dir=self.program_cache_dir,
+                           cache_mode=self.cache_mode)
 
 
 def _shardings(specs, axes, mesh):
@@ -461,6 +476,7 @@ class ServingEngine:
         wd = StragglerWatchdog(threshold=cfg.straggler_threshold)
         ft = {"failures": 0, "restores": 0, "mesh_shrinks": 0,
               "checkpoints": 0, "shed_steps": 0, "shed_rounds": 0}
+        self._cache_snap = self._snap_cache()
         t0 = time.perf_counter()
         resume = False
         while True:
@@ -606,11 +622,24 @@ class ServingEngine:
             elif cfg.ckpt_every > 0 and rs.step % cfg.ckpt_every == 0:
                 self._save_slot_ckpt(rs, requests, ft)
 
+    #: cache counters surfaced per run as deltas in ``last_stats`` — a
+    #: warm replica shows ``compiled_programs=0, l2_hits>0``
+    _CACHE_KEYS = ("compiled_programs", "l2_hits", "l2_misses",
+                   "l2_quarantined", "l2_writes", "l2_fallbacks")
+
+    def _snap_cache(self) -> dict:
+        s = cache_stats()
+        return {k: s[k] for k in self._CACHE_KEYS}
+
     def _set_stats(self, st: dict, occ_sum: float, wall_s: float) -> None:
         st["wall_s"] = wall_s
         st["tok_per_s"] = st["tokens"] / wall_s if wall_s > 0 else 0.0
         st["mean_occupancy"] = (occ_sum / st["decode_steps"]
                                 if st["decode_steps"] else 0.0)
+        snap = getattr(self, "_cache_snap", None)
+        if snap is not None:
+            now = self._snap_cache()
+            st.update({k: now[k] - snap[k] for k in self._CACHE_KEYS})
         self.last_stats = st
 
     # -- legacy padded-wave loop (mesh path / families without slots) -----
@@ -624,6 +653,7 @@ class ServingEngine:
         st = {"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
               "decode_steps": 0}
         occ_sum = 0.0
+        self._cache_snap = self._snap_cache()
         t0 = time.perf_counter()
         for wave_start in range(0, len(requests), self.batch):
             wave = requests[wave_start: wave_start + self.batch]

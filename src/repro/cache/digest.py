@@ -16,9 +16,18 @@ Encoding rules:
   key so insertion order never leaks into the digest.
 * numpy arrays encode shape + dtype + raw bytes.
 * callables (``pyfunc`` nodes, lifted composites) encode as
-  ``module.qualname`` **plus a hash of their bytecode** — the qualname is
-  the cross-process identity, the bytecode hash catches the function being
-  edited between runs (same name, different program: must miss).
+  ``module.qualname`` **plus a hash of their full code identity** — the
+  qualname is the cross-process identity; the code hash covers bytecode,
+  constants (recursing into nested code objects), referenced names,
+  defaults, and captured closure-cell values, so editing the function in
+  ANY way that changes its behavior (same name, different program — e.g.
+  flipping ``x*0.5`` to ``x*0.25``, which changes ``co_consts`` but not
+  ``co_code``) changes the digest: must miss.  Bound methods digest via
+  ``__func__``; ``functools.partial`` digests func + bound args.
+* callables with NO introspectable code (builtins, C extensions, callable
+  instances) are salted with a per-process nonce: stable within the
+  process (L1 self-hits still work), a guaranteed cross-process MISS —
+  we cannot fingerprint their behavior, so they must never false-hit.
 * dataclass-ish leaves (``TensorType``) encode via their fields.
 
 Anything unrecognized falls back to ``repr`` — if that repr embeds a
@@ -28,13 +37,75 @@ MISS, never a false hit.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
+import os
+import types
 from typing import Any
 
 import numpy as np
 
+#: Per-process salt for callables whose behavior cannot be fingerprinted
+#: (no ``__code__``).  A digest containing it is stable inside one process
+#: and never matches another process's — forced miss, never a false hit.
+_OPAQUE_CALLABLE_NONCE = os.urandom(16)
 
-def _encode(obj: Any, h) -> None:
+
+def _hash_code_identity(code: types.CodeType, h, seen: set) -> None:
+    """Full behavioral identity of a code object: bytecode + constants
+    (recursing into nested code objects — inline lambdas, comprehensions)
+    + the global/attribute names the bytecode references."""
+    h.update(b"C:")
+    h.update(code.co_code)
+    h.update(f":{len(code.co_consts)}:".encode())
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            _hash_code_identity(c, h, seen)
+        else:
+            _encode(c, h, seen)
+    _encode(code.co_names, h, seen)
+    h.update(b";")
+
+
+def _encode_callable(obj: Any, h, seen: set) -> None:
+    if id(obj) in seen:          # recursive closure (fn captured in its
+        h.update(b"c:cycle;")    # own cell): structure already hashed
+        return
+    seen = seen | {id(obj)}
+    if isinstance(obj, functools.partial):
+        h.update(b"cp:")
+        _encode(obj.func, h, seen)
+        _encode(tuple(obj.args), h, seen)
+        _encode(dict(obj.keywords or {}), h, seen)
+        h.update(b";")
+        return
+    fn = getattr(obj, "__func__", obj)          # bound method -> function
+    mod = getattr(fn, "__module__", "?")
+    qual = getattr(fn, "__qualname__", getattr(fn, "__name__", "?"))
+    code = getattr(fn, "__code__", None)
+    if not isinstance(code, types.CodeType):
+        # builtin / C extension / callable instance: behavior is not
+        # introspectable, so a stable digest could false-hit after the
+        # callable changes.  Per-process nonce => forced cross-process miss.
+        h.update(f"c!:{mod}.{qual}:".encode())
+        h.update(_OPAQUE_CALLABLE_NONCE)
+        h.update(b";")
+        return
+    hc = hashlib.sha256()
+    _hash_code_identity(code, hc, seen)
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            _encode(cell.cell_contents, hc, seen)
+        except ValueError:                      # not-yet-filled cell
+            hc.update(b"cell:empty;")
+    _encode(getattr(fn, "__defaults__", None), hc, seen)
+    _encode(getattr(fn, "__kwdefaults__", None), hc, seen)
+    h.update(f"c:{mod}.{qual}:".encode())
+    h.update(hc.digest())
+    h.update(b";")
+
+
+def _encode(obj: Any, h, seen: set) -> None:
     if obj is None:
         h.update(b"N;")
     elif isinstance(obj, bool):
@@ -55,47 +126,46 @@ def _encode(obj: Any, h) -> None:
     elif isinstance(obj, (tuple, list)):
         h.update(f"t:{len(obj)}:".encode())
         for v in obj:
-            _encode(v, h)
+            _encode(v, h, seen)
         h.update(b";")
     elif isinstance(obj, dict):
         items = []
         for k, v in obj.items():
             hk = hashlib.sha256()
-            _encode(k, hk)
+            _encode(k, hk, seen)
             items.append((hk.digest(), k, v))
         h.update(f"d:{len(items)}:".encode())
         for _, k, v in sorted(items, key=lambda e: e[0]):
-            _encode(k, h)
-            _encode(v, h)
+            _encode(k, h, seen)
+            _encode(v, h, seen)
         h.update(b";")
     elif isinstance(obj, np.ndarray):
         h.update(f"a:{obj.shape}:{obj.dtype.str}:".encode())
         h.update(np.ascontiguousarray(obj).tobytes())
         h.update(b";")
     elif isinstance(obj, (np.integer, np.floating, np.bool_)):
-        _encode(obj.item(), h)
+        _encode(obj.item(), h, seen)
+    elif isinstance(obj, type):
+        # a class used as a key marker: identity is its qualname (method
+        # bodies are not part of graph keys — instances digest by fields)
+        h.update(f"T:{getattr(obj, '__module__', '?')}"
+                 f".{getattr(obj, '__qualname__', '?')};".encode())
     elif callable(obj):
-        mod = getattr(obj, "__module__", "?")
-        qual = getattr(obj, "__qualname__", getattr(obj, "__name__", "?"))
-        code = getattr(obj, "__code__", None)
-        co = code.co_code if code is not None else b""
-        h.update(f"c:{mod}.{qual}:".encode())
-        h.update(hashlib.sha256(co).digest())
-        h.update(b";")
-    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        _encode_callable(obj, h, seen)
+    elif dataclasses.is_dataclass(obj):
         h.update(f"D:{type(obj).__name__}:".encode())
         for f in dataclasses.fields(obj):
-            _encode(f.name, h)
-            _encode(getattr(obj, f.name), h)
+            _encode(f.name, h, seen)
+            _encode(getattr(obj, f.name), h, seen)
         h.update(b";")
     else:
         # last resort: repr.  A repr embedding a memory address digests
         # differently per process — a guaranteed miss, never a false hit.
-        _encode(f"r:{type(obj).__name__}:{obj!r}", h)
+        _encode(f"r:{type(obj).__name__}:{obj!r}", h, seen)
 
 
 def stable_digest(obj: Any) -> str:
     """sha256 hex digest of ``obj`` under the canonical encoding above."""
     h = hashlib.sha256()
-    _encode(obj, h)
+    _encode(obj, h, set())
     return h.hexdigest()

@@ -2,7 +2,7 @@
 
 Layout (one pair of files per program, content-addressed by key digest)::
 
-    <root>/v1/<dd>/<digest>.bin     # pickled (payload, in_tree, out_tree)
+    <root>/v1/<dd>/<digest>.bin     # framed (blob, in_tree, out_tree)
     <root>/v1/<dd>/<digest>.json    # sidecar: provenance + integrity
     <root>/quarantine/              # entries that failed verification
 
@@ -23,17 +23,35 @@ rename, readers never observe a torn entry):
 Read protocol (**quarantine-and-recompile**: a cache problem may cost a
 compile, never correctness):
 
-* sidecar missing / unparsable          -> miss (in-progress write) or
-  quarantine (parse error)
+* sidecar missing                       -> miss (in-progress write)
+* sidecar unparsable                    -> quarantine, miss
 * format / jax / jaxlib / pipeline-salt
   mismatch                              -> version skew: quarantine, miss
 * payload missing, short, or sha256
   mismatch vs the sidecar               -> corruption: quarantine, miss
-* unpickling fails                      -> corruption: quarantine, miss
+* payload decode fails                  -> corruption: quarantine, miss
 
+A failed verification is retried ONCE before quarantining: payload and
+sidecar are replaced independently, so a reader racing two same-key
+writers can observe writer A's payload next to writer B's sidecar — the
+pair has settled by the re-read, which separates that transient torn
+*observation* from durable corruption.  Quarantine itself only runs in
+``readwrite`` mode: a ``read``-mode instance (probe-only replica over a
+fleet-shared store) reports a miss without ever mutating the store, so
+one version-skewed replica cannot evict the warm cache for everyone.
 Quarantined entries are RENAMED into ``quarantine/`` (never deleted — a
 fleet operator can post-mortem them) and are never probed again: ``get``
 only looks under ``v1/``.
+
+Trust model: the payload container is a framed JSON + raw-bytes encoding
+— NO pickle, so a crafted ``.bin`` cannot execute code at decode time.
+The XLA blob inside it is still handed to the runtime's native executable
+deserializer, and the sha256 sidecar is an *integrity* check (bit rot,
+torn writes), not *authentication* — so ``program_cache_dir`` must only
+be writable by principals you would let publish code into the process.
+Directories this module creates are made mode 0o700; a shared fleet
+cache that intentionally widens access (e.g. group-writable) is the
+operator's trust decision to make.
 """
 from __future__ import annotations
 
@@ -41,12 +59,14 @@ import contextlib
 import hashlib
 import json
 import os
-import pickle
 import shutil
+import threading
 import uuid
 from typing import Any, Optional
 
-FORMAT_VERSION = 1
+#: 2: payload container moved from pickle to the framed no-pickle
+#: encoding (``encode_program_payload``) — v1 entries skew-miss.
+FORMAT_VERSION = 2
 
 #: Pipeline semantics salt.  Part of every L2 key: any PR that changes what
 #: the pass pipeline / lowering emits for the same graph signature MUST
@@ -97,6 +117,14 @@ def enable_xla_disk_cache(root: str) -> None:
         pass    # older jax without the knobs: L2 still works alone
 
 
+#: ``jax_enable_compilation_cache`` is process-global state: the suspend
+#: window below flips it off and back on, so every compile that uses the
+#: guard must be serialized through this lock or a concurrent region
+#: compile could land inside another thread's window and be served from
+#: the XLA cache — the exact poisoning the guard exists to prevent.
+_XLA_SUSPEND_LOCK = threading.RLock()
+
+
 @contextlib.contextmanager
 def suspend_xla_disk_cache():
     """Run a compile OUTSIDE jax's persistent compilation cache.
@@ -109,24 +137,32 @@ def suspend_xla_disk_cache():
     ``deserialize_and_load``).  The cache-used verdict is latched, so
     disabling means flipping the flag AND resetting the latch on both
     edges; the on-disk entries are untouched, only the verdict re-reads
-    the config."""
+    the config.
+
+    Holds ``_XLA_SUSPEND_LOCK`` for the whole window: concurrent region
+    AOT compiles serialize instead of racing the global flag.  Compiles
+    issued by other threads that do NOT take this guard can still observe
+    the flag down mid-window (jax config is process-global); within repro
+    every region compile funnels through here, and the publish-time
+    load-back check in ``_l2_publish`` backstops anything that slips."""
     import jax
-    try:
-        from jax._src import compilation_cache
-        active = (jax.config.jax_compilation_cache_dir
-                  and jax.config.jax_enable_compilation_cache)
-    except Exception:
-        active = False
-    if not active:
-        yield
-        return
-    jax.config.update("jax_enable_compilation_cache", False)
-    compilation_cache.reset_cache()
-    try:
-        yield
-    finally:
-        jax.config.update("jax_enable_compilation_cache", True)
+    with _XLA_SUSPEND_LOCK:
+        try:
+            from jax._src import compilation_cache
+            active = (jax.config.jax_compilation_cache_dir
+                      and jax.config.jax_enable_compilation_cache)
+        except Exception:
+            active = False
+        if not active:
+            yield
+            return
+        jax.config.update("jax_enable_compilation_cache", False)
         compilation_cache.reset_cache()
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_compilation_cache", True)
+            compilation_cache.reset_cache()
 
 
 def atomic_write_bytes(path: str, data: bytes) -> None:
@@ -145,11 +181,122 @@ def atomic_write_json(path: str, obj: Any) -> None:
                                         default=str).encode())
 
 
+def _makedirs_private(path: str) -> None:
+    """``mkdir -p`` that chmods every component THIS process creates to
+    0o700 (chmod, not mode=, so the umask can't widen it).  Pre-existing
+    directories are left alone — a deliberately group-shared fleet cache
+    is the operator's trust decision (see module docstring)."""
+    created = []
+    p = os.path.abspath(path)
+    while p and not os.path.isdir(p):
+        created.append(p)
+        parent = os.path.dirname(p)
+        if parent == p:
+            break
+        p = parent
+    os.makedirs(path, exist_ok=True)
+    for q in created:
+        try:
+            os.chmod(q, 0o700)
+        except OSError:
+            pass
+
+
+# -- payload container codec (deliberately NOT pickle: see trust model) -----
+#
+# A program payload is ``(blob, in_tree, out_tree)``: an opaque bytes blob
+# from ``jax.experimental.serialize_executable.serialize`` plus two
+# PyTreeDefs.  The treedefs of region programs are built from standard
+# containers only (the positional-jit calling convention is
+# ``((arg0..argN), {})``; outputs are tuples/lists/dicts of arrays), so
+# they round-trip through a tagged JSON skeleton — no arbitrary object
+# construction on decode.  Frame::
+#
+#     b"RPC2" | u32 header length | header JSON | raw blob
+#
+# ``encode`` raises ValueError on a treedef containing non-standard nodes
+# (publish is skipped — degrade to uncached, never to pickle); ``decode``
+# raises ValueError on any malformed frame (caller quarantines).
+
+_PAYLOAD_MAGIC = b"RPC2"
+
+
+def _skeleton_to_obj(x: Any, leaf: Any) -> Any:
+    if x is leaf:
+        return {"t": "leaf"}
+    if x is None:
+        return {"t": "none"}
+    if isinstance(x, (tuple, list)):
+        tag = "tuple" if isinstance(x, tuple) else "list"
+        return {"t": tag, "v": [_skeleton_to_obj(v, leaf) for v in x]}
+    if isinstance(x, dict):
+        items = []
+        for k in sorted(x, key=repr):
+            if not isinstance(k, (str, int, bool)) or isinstance(k, bool):
+                raise ValueError(f"unsupported treedef dict key {k!r}")
+            items.append([k, _skeleton_to_obj(x[k], leaf)])
+        return {"t": "dict", "v": items}
+    raise ValueError(f"unsupported treedef node {type(x).__name__}")
+
+
+def _obj_to_skeleton(o: Any, leaf: Any) -> Any:
+    tag = o.get("t") if isinstance(o, dict) else None
+    if tag == "leaf":
+        return leaf
+    if tag == "none":
+        return None
+    if tag in ("tuple", "list"):
+        seq = [_obj_to_skeleton(v, leaf) for v in o["v"]]
+        return tuple(seq) if tag == "tuple" else seq
+    if tag == "dict":
+        out = {}
+        for k, v in o["v"]:
+            if not isinstance(k, (str, int)) or isinstance(k, bool):
+                raise ValueError(f"unsupported treedef dict key {k!r}")
+            out[k] = _obj_to_skeleton(v, leaf)
+        return out
+    raise ValueError(f"unsupported treedef node tag {tag!r}")
+
+
+def encode_program_payload(blob: bytes, in_tree, out_tree) -> bytes:
+    import jax
+    leaf = object()
+
+    def tree_obj(td):
+        skel = jax.tree_util.tree_unflatten(td, [leaf] * td.num_leaves)
+        return _skeleton_to_obj(skel, leaf)
+
+    header = json.dumps({"in_tree": tree_obj(in_tree),
+                         "out_tree": tree_obj(out_tree)},
+                        sort_keys=True).encode()
+    return (_PAYLOAD_MAGIC + len(header).to_bytes(4, "big")
+            + header + bytes(blob))
+
+
+def decode_program_payload(raw: bytes):
+    import jax
+    if raw[:4] != _PAYLOAD_MAGIC:
+        raise ValueError("bad payload magic")
+    n = int.from_bytes(raw[4:8], "big")
+    if len(raw) < 8 + n:
+        raise ValueError("truncated payload header")
+    header = json.loads(raw[8:8 + n].decode())
+    leaf = object()
+
+    def tree_def(o):
+        return jax.tree_util.tree_structure(
+            _obj_to_skeleton(o, leaf), is_leaf=lambda x: x is leaf)
+
+    return (raw[8 + n:], tree_def(header["in_tree"]),
+            tree_def(header["out_tree"]))
+
+
 class ProgramDiskCache:
     """Content-addressed store for serialized AOT executables.
 
     ``mode``: ``"off"`` (every call a no-op), ``"read"`` (probe but never
-    publish), ``"readwrite"``.  All verification failures increment
+    publish NOR quarantine — the store is immutable to this instance),
+    ``"readwrite"``.  In readwrite mode verification failures increment
     ``stats["quarantined"]`` and move the entry aside; ``get`` then reports
     a miss so the caller recompiles.
     """
@@ -178,8 +325,15 @@ class ProgramDiskCache:
 
     # -- quarantine -------------------------------------------------------
     def quarantine(self, digest: str, reason: str) -> None:
-        """Move a bad entry aside (never deleted, never re-read)."""
-        os.makedirs(self.quarantine_dir, exist_ok=True)
+        """Move a bad entry aside (never deleted, never re-read).
+
+        No-op outside ``readwrite``: a probe-only (``read``) instance must
+        never mutate the shared store — one version-skewed read replica
+        (e.g. older jaxlib mid rolling-upgrade) would otherwise quarantine
+        every entry it probes and evict the fleet's warm cache."""
+        if self.mode != "readwrite":
+            return
+        _makedirs_private(self.quarantine_dir)
         nonce = uuid.uuid4().hex[:8]
         for path in self.entry_paths(digest):
             if os.path.exists(path):
@@ -193,64 +347,74 @@ class ProgramDiskCache:
         self.stats["quarantined"] += 1
 
     # -- read -------------------------------------------------------------
-    def get(self, digest: str) -> Optional[tuple[Any, dict]]:
-        """Verified read: ``(unpickled payload, sidecar meta)`` or None.
-
-        The payload object is whatever ``put`` pickled (for program
-        entries: ``(serialized_executable, in_tree, out_tree)``).  Any
-        integrity or version failure quarantines the entry and returns
-        None — the caller's only fallback is a clean recompile.
-        """
-        if self.mode == "off":
-            return None
+    def _read_verified(self, digest: str):
+        """One verification attempt: ``((payload, meta), None)`` on success
+        or ``(None, reason)`` — reason ``"absent"`` is a plain miss, any
+        other reason is a verification failure."""
         bin_path, json_path = self.entry_paths(digest)
         if not os.path.exists(json_path):
-            self.stats["misses"] += 1
-            return None
+            return None, "absent"
         try:
             with open(json_path, "rb") as f:
                 meta = json.loads(f.read().decode())
         except (OSError, ValueError, UnicodeDecodeError):
-            self.quarantine(digest, "sidecar-unreadable")
-            self.stats["misses"] += 1
-            return None
+            return None, "sidecar-unreadable"
         want = _versions()
         got = {k: meta.get(k) for k in want}
         if got != want or meta.get("key_digest") != digest:
-            self.quarantine(digest, "version-skew")
-            self.stats["misses"] += 1
-            return None
+            return None, "version-skew"
         try:
             with open(bin_path, "rb") as f:
                 raw = f.read()
         except OSError:
-            self.quarantine(digest, "payload-missing")
-            self.stats["misses"] += 1
-            return None
+            return None, "payload-missing"
         if (len(raw) != meta.get("payload_bytes")
                 or hashlib.sha256(raw).hexdigest()
                 != meta.get("payload_sha256")):
-            self.quarantine(digest, "payload-corrupt")
-            self.stats["misses"] += 1
-            return None
+            return None, "payload-corrupt"
         try:
-            payload = pickle.loads(raw)
+            payload = decode_program_payload(raw)
         except Exception:
-            self.quarantine(digest, "unpickle-failed")
-            self.stats["misses"] += 1
+            return None, "payload-decode-failed"
+        return (payload, meta), None
+
+    def get(self, digest: str) -> Optional[tuple[Any, dict]]:
+        """Verified read: ``((blob, in_tree, out_tree), sidecar meta)`` or
+        None.  Any integrity or version failure is retried once (racing
+        same-key writers replace payload and sidecar independently, so a
+        reader can transiently observe writer A's payload next to writer
+        B's sidecar — settled by the re-read), then quarantines the entry
+        (readwrite mode only) and returns None: the caller's fallback is a
+        clean recompile, which in readwrite mode republishes and heals the
+        slot."""
+        if self.mode == "off":
             return None
-        self.stats["hits"] += 1
-        return payload, meta
+        got, reason = self._read_verified(digest)
+        if got is None and reason != "absent":
+            got, reason = self._read_verified(digest)
+        if got is not None:
+            self.stats["hits"] += 1
+            return got
+        if reason != "absent":
+            self.quarantine(digest, reason)
+        self.stats["misses"] += 1
+        return None
 
     # -- write ------------------------------------------------------------
-    def put(self, digest: str, payload_obj: Any,
+    def put(self, digest: str, payload_obj: tuple,
             meta: Optional[dict] = None) -> bool:
-        """Transactional publish; returns False in read/off modes."""
+        """Transactional publish of a ``(blob, in_tree, out_tree)`` program
+        payload; returns False in read/off modes, and False (publish
+        skipped, process serves uncached) if the treedefs contain
+        non-standard pytree nodes the safe codec refuses."""
         if self.mode != "readwrite":
             return False
-        raw = pickle.dumps(payload_obj, protocol=pickle.HIGHEST_PROTOCOL)
+        try:
+            raw = encode_program_payload(*payload_obj)
+        except Exception:
+            return False
         bin_path, json_path = self.entry_paths(digest)
-        os.makedirs(os.path.dirname(bin_path), exist_ok=True)
+        _makedirs_private(os.path.dirname(bin_path))
         sidecar = dict(meta or {})
         sidecar.update(_versions(), key_digest=digest,
                        payload_sha256=hashlib.sha256(raw).hexdigest(),

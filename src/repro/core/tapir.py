@@ -255,7 +255,8 @@ def _l2_load(l2, digest: str, g: TaskGraph, cfg: TapirConfig, backend: str,
              key: tuple, example_inputs: dict) -> Optional[Callable]:
     """Verified L2 probe: deserialize the AOT executable and rebuild the
     replay callable from the sidecar (input-name order + recorded avals).
-    Every failure past the probe quarantines the entry and returns None —
+    Every failure past the probe quarantines the entry (in readwrite mode
+    — a read-mode probe never mutates the shared store) and returns None —
     the caller recompiles."""
     q0 = l2.stats["quarantined"]
     got = l2.get(digest)
@@ -276,8 +277,9 @@ def _l2_load(l2, digest: str, g: TaskGraph, cfg: TapirConfig, backend: str,
                 raise ValueError(f"aval mismatch on input {n}")
         compiled = deserialize_and_load(blob, in_tree, out_tree)
     except Exception:
-        l2.quarantine(digest, "deserialize-failed")
-        _CACHE_STATS["l2_quarantined"] += 1
+        q1 = l2.stats["quarantined"]
+        l2.quarantine(digest, "deserialize-failed")   # no-op in read mode
+        _CACHE_STATS["l2_quarantined"] += l2.stats["quarantined"] - q1
         _CACHE_STATS["l2_misses"] += 1
         return None
     _CACHE_STATS["l2_hits"] += 1

@@ -18,6 +18,7 @@ Four attack surfaces:
    ``invalidate_mesh`` must purge BOTH so a dead mesh's programs cannot
    resurrect from disk.
 """
+import functools
 import itertools
 import json
 import os
@@ -181,6 +182,60 @@ def test_stable_digest_canonicalization():
     assert stable_digest(f) != stable_digest(g)  # different qualname
 
 
+def test_callable_digest_covers_full_code_identity():
+    """Regression (review): hashing only ``co_code`` missed constant edits
+    — flipping ``x*0.5`` to ``x*0.25`` changes ``co_consts`` but not the
+    bytecode, so a stale AOT executable replayed as a false hit.  The
+    digest must cover consts, referenced names, defaults, closure cells,
+    and nested code objects."""
+    # same qualname ("<lambda>"), identical bytecode, different co_consts
+    assert (stable_digest(eval("lambda v: v * 0.5"))
+            != stable_digest(eval("lambda v: v * 0.25")))
+    assert (stable_digest(eval("lambda v: v * 0.5"))
+            == stable_digest(eval("lambda v: v * 0.5")))
+
+    # identical code object, different captured closure-cell value
+    def make(c):
+        def scaled(v):
+            return v * c
+        return scaled
+    assert stable_digest(make(0.5)) != stable_digest(make(0.25))
+    assert stable_digest(make(0.5)) == stable_digest(make(0.5))
+
+    # identical bytecode, different referenced global names
+    assert (stable_digest(eval("lambda v: np.sin(v)", {"np": np}))
+            != stable_digest(eval("lambda v: np.cos(v)", {"np": np})))
+
+    # default argument values live outside co_consts
+    assert (stable_digest(eval("lambda v, s=0.5: v * s"))
+            != stable_digest(eval("lambda v, s=0.25: v * s")))
+
+    # nested code objects (inline lambda edited)
+    assert (stable_digest(eval("lambda v: (lambda u: u + 1)(v)"))
+            != stable_digest(eval("lambda v: (lambda u: u + 2)(v)")))
+
+    # functools.partial: bound arguments are part of the program
+    base = eval("lambda v, s: v * s")
+    assert (stable_digest(functools.partial(base, s=0.5))
+            != stable_digest(functools.partial(base, s=0.25)))
+
+
+def test_opaque_callable_digest_never_crosses_processes():
+    """A callable with no introspectable code (C extension, builtin)
+    cannot be behavior-fingerprinted, so its digest is salted per process:
+    stable inside one process, a guaranteed MISS from any other — never a
+    false hit on a changed binary."""
+    assert stable_digest(np.tanh) == stable_digest(np.tanh)
+    from repro.testing import SRC_DIR
+    code = ("import numpy as np\n"
+            "from repro.cache import stable_digest\n"
+            "print(stable_digest(np.tanh))\n")
+    env = dict(os.environ, PYTHONPATH=SRC_DIR)
+    out = subprocess.check_output([sys.executable, "-c", code], env=env,
+                                  text=True)
+    assert out.strip() != stable_digest(np.tanh)
+
+
 # ---------------------------------------------------------------------------
 # 2. corruption / version skew -> quarantine-and-recompile
 # ---------------------------------------------------------------------------
@@ -247,6 +302,85 @@ def test_read_mode_never_publishes(tmp_path):
     _, st1 = _region_program(d, mode="read")
     assert st1["compiled_programs"] == 1 and st1["l2_writes"] == 0
     assert ProgramDiskCache(d, "read").entries() == []
+
+
+def test_read_mode_never_quarantines_shared_store(tmp_path):
+    """Regression (review): a read-mode replica (e.g. version-skewed mid
+    rolling-upgrade) used to ``os.replace`` every failing entry into
+    ``quarantine/`` — one probe-only instance could evict the fleet's
+    entire warm cache.  A read-mode verification failure must report a
+    miss and leave the store byte-for-byte untouched."""
+    d = str(tmp_path / "store")
+    clear_cache()
+    out_cold, _ = _region_program(d)            # populate via readwrite
+    bin_path, json_path = _only_entry(d)
+    raw = bytearray(open(bin_path, "rb").read())
+    raw[len(raw) // 2] ^= 0x01
+    with open(bin_path, "wb") as f:
+        f.write(raw)
+    clear_cache()
+    out, st = _region_program(d, mode="read")   # corrupt probe, read-only
+    assert st["compiled_programs"] == 1 and st["l2_hits"] == 0
+    assert st["l2_quarantined"] == 0 and st["l2_writes"] == 0
+    assert out.tobytes() == out_cold.tobytes()
+    assert os.path.exists(bin_path) and os.path.exists(json_path), \
+        "probe-only instance must leave even a corrupt entry in place"
+    assert not os.path.isdir(os.path.join(d, "quarantine"))
+    # version skew (the rolling-upgrade scenario): same rule
+    meta = json.load(open(json_path))
+    meta["jaxlib"] = "99.99.99"
+    with open(json_path, "w") as f:
+        json.dump(meta, f)
+    ro = ProgramDiskCache(d, "read")
+    digest = ro.entries()[0][0]
+    assert ro.get(digest) is None
+    assert ro.stats["quarantined"] == 0
+    assert os.path.exists(bin_path) and os.path.exists(json_path)
+
+
+def test_payload_container_is_not_pickle(tmp_path):
+    """The on-disk payload container must never unpickle (a crafted entry
+    in a shared cache dir would otherwise execute code in every replica
+    that probes it): the codec round-trips (blob, in_tree, out_tree)
+    through framed JSON, and a pickle bomb fails closed as a decode error
+    — quarantined in readwrite, ignored in read mode."""
+    import pickle
+
+    from repro.cache.disk import (decode_program_payload,
+                                  encode_program_payload)
+    in_tree = jax.tree_util.tree_structure(((0, 0, 0), {}))
+    out_tree = jax.tree_util.tree_structure({"a": 0, "b": (0, [0, None])})
+    raw = encode_program_payload(b"\x00XLA-BLOB\xff", in_tree, out_tree)
+    blob, it, ot = decode_program_payload(raw)
+    assert blob == b"\x00XLA-BLOB\xff"
+    assert it == in_tree and ot == out_tree
+
+    class Boom:
+        def __reduce__(self):
+            return (os.system, ("false",))
+
+    bomb = pickle.dumps(Boom())
+    with pytest.raises(ValueError):
+        decode_program_payload(bomb)
+
+    # end-to-end: a pickle payload planted in the store degrades to a
+    # clean recompile, never an unpickle
+    d = str(tmp_path / "store")
+    clear_cache()
+    out_cold, _ = _region_program(d)
+    bin_path, json_path = _only_entry(d)
+    with open(bin_path, "wb") as f:
+        f.write(bomb)
+    meta = json.load(open(json_path))
+    meta["payload_sha256"] = __import__("hashlib").sha256(bomb).hexdigest()
+    meta["payload_bytes"] = len(bomb)
+    with open(json_path, "w") as f:
+        json.dump(meta, f)
+    clear_cache()
+    out_warm, st = _region_program(d)
+    assert st["l2_hits"] == 0 and st["compiled_programs"] == 1
+    assert st["l2_quarantined"] >= 1
+    assert out_warm.tobytes() == out_cold.tobytes()
 
 
 # ---------------------------------------------------------------------------

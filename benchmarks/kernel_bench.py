@@ -376,6 +376,100 @@ def bench_serve_continuous_vs_wave(iters: int = 3, slots: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# serve_prefix_vs_baseline: ref-counted shared prefix pages (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_prefix_vs_baseline(iters: int = 2, slots: int = 4,
+                                   n_requests: int = 12,
+                                   prefix_len: int = 512,
+                                   json_path="BENCH_prefix.json"):
+    """Tokens/sec on a system-prompt-heavy workload: ``n_requests``
+    prompts sharing a ``prefix_len``-token prefix (distinct 8-token
+    suffixes), served with the shared-prefix page index ON vs OFF.  With
+    sharing, the first admit prefills the whole prompt and publishes the
+    prefix pages; every later admit binds them read-only and prefills
+    ONLY its suffix — prefill cost stops scaling with N.  Page
+    indirection is data (per-slot page table), so the decode program
+    replays from ``_PROGRAMS`` at every binding and the outputs stay
+    bitwise-identical to the unshared engine."""
+    import dataclasses
+
+    import repro.configs as C
+    from repro.models.base import get_model
+    from repro.serve import Request, ServeConfig, ServingEngine
+
+    cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 400, size=prefix_len).astype(np.int32)
+    suffixes = [rng.integers(1, 400, size=8).astype(np.int32)
+                for _ in range(n_requests)]
+    max_len = prefix_len + 64                      # 64 | max_len
+    max_new = 8
+
+    def mk():
+        return [Request(rid=i,
+                        prompt=np.concatenate([prefix, sfx]),
+                        max_new=max_new)
+                for i, sfx in enumerate(suffixes)]
+
+    clear_cache()
+    shared = ServingEngine(model, params, batch=slots, max_len=max_len,
+                           cfg=ServeConfig(target="cpu"))
+    base = ServingEngine(model, params, batch=slots, max_len=max_len,
+                         cfg=ServeConfig(target="cpu",
+                                         prefix_sharing=False))
+    # warmup compiles every program (full-prompt bucket, suffix bucket,
+    # decode, heads); the timed runs replay from ``_PROGRAMS``
+    ref = base.run(mk(), max_steps=4096)
+    shared.run(mk(), max_steps=4096)
+
+    results = {}
+    for label, eng in (("baseline", base), ("shared", shared)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = eng.run(mk(), max_steps=4096)
+        t = (time.perf_counter() - t0) / iters
+        toks = sum(len(r.out) for r in out)
+        st = eng.last_stats
+        results[label] = {
+            "wall_s": t, "tokens": toks, "tok_per_s": toks / t,
+            "bitwise_match": all(a.out == b.out and a.done and b.done
+                                 for a, b in zip(ref, out)),
+            "prefix_hits": st.get("prefix_hits", 0),
+            "prefix_tokens_saved": st.get("prefix_tokens_saved", 0),
+            # replay after warmup must not compile anything new: page
+            # indirection is data, not shape
+            "compiled_programs": st.get("compiled_programs", 0),
+        }
+        print(f"serve_prefix_vs_baseline {label:9s} {t*1e3:9.1f} ms "
+              f"({toks} tokens, {toks/t:8.1f} tok/s, "
+              f"hits={st.get('prefix_hits', 0)}, "
+              f"saved={st.get('prefix_tokens_saved', 0)} tok)")
+    speedup = (results["shared"]["tok_per_s"]
+               / results["baseline"]["tok_per_s"])
+    prefill_once = (results["shared"]["prefix_hits"] == n_requests - 1)
+    bitwise = bool(results["baseline"]["bitwise_match"]
+                   and results["shared"]["bitwise_match"])
+    print(f"serve_prefix_vs_baseline speedup: {speedup:.2f}x "
+          f"(bitwise={bitwise}, prefix prefilled once={prefill_once})")
+    out = {"baseline": results["baseline"], "shared": results["shared"],
+           "speedup": speedup, "bitwise_match": bitwise,
+           "prefix_prefilled_once": bool(prefill_once),
+           "warm_compiled": int(results["shared"]["compiled_programs"]),
+           "config": {"slots": slots, "requests": n_requests,
+                      "prefix_len": prefix_len, "suffix_len": 8,
+                      "max_new": max_new, "max_len": max_len}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # serve_mesh_vs_single: slot serving on a TP mesh (ISSUE 5 tentpole)
 # ---------------------------------------------------------------------------
 
@@ -735,6 +829,7 @@ def main():
                     choices=["all", "region_vs_per_op",
                              "decode_region_vs_per_op",
                              "serve_continuous_vs_wave",
+                             "serve_prefix_vs_baseline",
                              "serve_mesh_vs_single",
                              "serve_fault_vs_clean",
                              "program_cache_cold_vs_warm",
@@ -754,6 +849,10 @@ def main():
     if args.case == "serve_continuous_vs_wave":
         bench_serve_continuous_vs_wave(
             iters=args.iters, json_path=args.json or "BENCH_serve.json")
+        return
+    if args.case == "serve_prefix_vs_baseline":
+        bench_serve_prefix_vs_baseline(
+            iters=args.iters, json_path=args.json or "BENCH_prefix.json")
         return
     if args.case == "serve_mesh_vs_single":
         bench_serve_mesh_vs_single(iters=args.iters,

@@ -24,7 +24,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           min_decode_speedup: float = 1.3,
           min_serve_speedup: float = 1.3,
           max_fault_overhead: float = 0.25,
-          min_warm_ttft_speedup: float = 5.0) -> int:
+          min_warm_ttft_speedup: float = 5.0,
+          min_prefix_speedup: float = 1.5) -> int:
     """Perf regression gate: run the two region benchmarks, the
     continuous-batching benchmark, the mesh-serving benchmark and the
     fault-recovery benchmark, and FAIL (non-zero exit) if
@@ -43,7 +44,12 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     materialized score matrix wins), or program_cache_cold_vs_warm's
     warm process compiles any XLA program / reaches its first token
     slower than ``min_warm_ttft_speedup`` vs cold / stops matching the
-    cold run bitwise / quarantines entries on a clean cycle."""
+    cold run bitwise / quarantines entries on a clean cycle, or
+    serve_prefix_vs_baseline's shared-prefix engine drops below
+    ``min_prefix_speedup`` tokens/sec vs the unshared engine on a
+    system-prompt-heavy workload / prefills the shared prefix more than
+    once / loses bitwise per-request equality / compiles any program
+    after warmup (page indirection must stay data, not shape)."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -60,6 +66,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_kernel.json"))
     cv = kernel_bench.bench_program_cache_cold_vs_warm(
         json_path=os.path.join(out_dir, "BENCH_cache.json"))
+    pv = kernel_bench.bench_serve_prefix_vs_baseline(
+        json_path=os.path.join(out_dir, "BENCH_prefix.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -120,6 +128,20 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     if cv["quarantined"]:
         failures.append(f"program cache quarantined {cv['quarantined']} "
                         f"entries on a clean cold/warm cycle")
+    if pv["speedup"] < min_prefix_speedup:
+        failures.append(f"serve_prefix_vs_baseline tokens/sec speedup "
+                        f"{pv['speedup']:.2f}x < {min_prefix_speedup}x")
+    if not pv["bitwise_match"]:
+        failures.append("shared-prefix serving no longer bitwise-matches "
+                        "the unshared engine per request")
+    if not pv["prefix_prefilled_once"]:
+        failures.append(f"shared prefix was re-prefilled: expected "
+                        f"{pv['config']['requests'] - 1} prefix hits, got "
+                        f"{pv['shared']['prefix_hits']}")
+    if pv["warm_compiled"] != 0:
+        failures.append(f"prefix-sharing engine compiled "
+                        f"{pv['warm_compiled']} programs after warmup "
+                        f"(page indirection leaked into program identity)")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -131,7 +153,9 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           f"({mv['mesh_annotated_nodes']} sharded nodes), fault recovery "
           f"{fv['overhead']*100:+.1f}% bitwise, donated, kernel_vs_jnp "
           f"impl choice measured-correct on both shapes, warm start "
-          f"{cv['ttft_speedup']:.1f}x ttft with 0 compiles bitwise")
+          f"{cv['ttft_speedup']:.1f}x ttft with 0 compiles bitwise, "
+          f"prefix sharing {pv['speedup']:.2f}x bitwise with prefix "
+          f"prefilled once")
     return 0
 
 

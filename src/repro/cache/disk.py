@@ -176,9 +176,23 @@ def atomic_write_bytes(path: str, data: bytes) -> None:
     os.replace(tmp, path)
 
 
+def _json_default(o: Any):
+    """numpy scalars/arrays serialize as NUMBERS, not their str() — a
+    checkpoint meta carrying an np.int64 must round-trip as an int, or
+    restore reads a string where the scheduler expects a count."""
+    import numpy as np
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
 def atomic_write_json(path: str, obj: Any) -> None:
     atomic_write_bytes(path, json.dumps(obj, indent=1, sort_keys=True,
-                                        default=str).encode())
+                                        default=_json_default).encode())
 
 
 def _makedirs_private(path: str) -> None:

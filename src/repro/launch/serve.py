@@ -49,6 +49,22 @@ def main(argv=None):
                          "dir makes restarts compile zero XLA programs")
     ap.add_argument("--cache-mode", default="readwrite",
                     choices=["off", "read", "readwrite"])
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="tokens of system-prompt prefix shared by every "
+                         "request (0 = fully distinct prompts); resident "
+                         "prefix pages make later admits prefill only "
+                         "their suffix")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the shared-prefix page index (baseline)")
+    ap.add_argument("--priorities", default=None,
+                    help="comma-separated per-request priorities 0..9 "
+                         "(cycled); higher may preempt lower when slots "
+                         "are full")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLO deadline (seconds from start); "
+                         "implies --admit-policy slo")
+    ap.add_argument("--admit-policy", default=None,
+                    choices=["strict", "reject", "slo"])
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -56,10 +72,19 @@ def main(argv=None):
     params = model.init_params(jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
+    prios = ([int(p) for p in args.priorities.split(",")]
+             if args.priorities else [0])
+    prefix = rng.integers(1, cfg.vocab,
+                          size=args.prefix_len).astype(np.int32)
+    suffix_len = max(1, args.prompt_len - args.prefix_len)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab,
-                                        size=args.prompt_len).astype(np.int32),
-                    max_new=args.max_new)
+                    prompt=np.concatenate(
+                        [prefix,
+                         rng.integers(1, cfg.vocab, size=suffix_len)
+                         .astype(np.int32)]),
+                    max_new=args.max_new,
+                    priority=prios[i % len(prios)],
+                    deadline_s=args.deadline_s)
             for i in range(args.requests)]
 
     faults = {}
@@ -71,10 +96,13 @@ def main(argv=None):
     injector = ScriptedFaultInjector(faults, repeat=args.straggle_repeat) \
         if faults else None
 
+    admit = args.admit_policy or ("slo" if args.deadline_s else "strict")
     eng = ServingEngine(model, params, batch=args.batch,
                         max_len=args.max_len,
                         cfg=ServeConfig(mode=args.mode, target="cpu",
                                         fault_injector=injector,
+                                        admit_policy=admit,
+                                        prefix_sharing=not args.no_prefix_sharing,
                                         ckpt_dir=args.ckpt_dir,
                                         ckpt_every=args.ckpt_every,
                                         program_cache_dir=args.program_cache_dir,
@@ -89,6 +117,15 @@ def main(argv=None):
         "new_tokens": total_new,
         "tok_per_s": total_new / max(dt, 1e-9),
         "sample_out": out[0].out[:8],
+        # per-request latency + page-policy observability
+        "ttft_p50_ms": round(st.get("ttft_p50", 0.0) * 1e3, 3),
+        "ttft_p95_ms": round(st.get("ttft_p95", 0.0) * 1e3, 3),
+        "queue_wait_p50_ms": round(st.get("queue_wait_p50", 0.0) * 1e3, 3),
+        "queue_wait_p95_ms": round(st.get("queue_wait_p95", 0.0) * 1e3, 3),
+        "prefix_hits": st.get("prefix_hits", 0),
+        "prefix_tokens_saved": st.get("prefix_tokens_saved", 0),
+        "preemptions": st.get("preemptions", 0),
+        "rejected": st.get("rejected", 0),
     }
     if args.program_cache_dir:
         report["cache"] = {k: st.get(k, 0) for k in

@@ -417,19 +417,22 @@ class MoELM(DenseLM):
         base["layers"] = layers
         return base
 
-    def _slot_moe_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
-        """MoE decode block over the slot page: attention, per-slot cache
-        scatter AND the routed expert FFN in ONE region."""
+    def _slot_moe_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos,
+                             ptab):
+        """MoE decode block over the paged pool: attention, page-table
+        cache scatter AND the routed expert FFN in ONE region."""
         x, ck, cv = self._slot_attn_body(p, x, rope_cos, rope_sin, ck, cv,
-                                         pos)
+                                         pos, ptab)
         x = x + self._moe_ffn_traced(p, self._norm(x, p["ln2"]))
         return x, ck, cv
 
-    def _slot_prefill_moe_block_body(self, p, x, cos, sin, ck, cv, slot):
+    def _slot_prefill_moe_block_body(self, p, x, rope_cos, rope_sin, ck, cv,
+                                     pos_vec, phys_vec, off_vec, prow, vlen):
         # dropless: serving prefill pads prompts to a bucket; capacity
         # drops there would let padding evict real tokens
-        x, ck, cv = self._slot_prefill_attn_body(p, x, cos, sin, ck, cv,
-                                                 slot)
+        x, ck, cv = self._slot_prefill_attn_body(
+            p, x, rope_cos, rope_sin, ck, cv, pos_vec, phys_vec, off_vec,
+            prow, vlen)
         x = x + self._moe_ffn_traced(p, self._norm(x, p["ln2"]),
                                      dropless=True)
         return x, ck, cv

@@ -265,30 +265,48 @@ class DenseLM(BaseModel):
     def supports_slots(self) -> bool:
         return True
 
-    def init_slot_cache(self, slots: int, max_len: int) -> dict:
-        """Per-layer K/V pages [slots, max_len, Hkv, hd] (python list — a
-        layer's page donates independently, no stack/unstack copies) plus
-        the per-slot length vector."""
+    def init_slot_cache(self, slots: int, max_len: int,
+                        page_len: int = None,
+                        shared_pages: int = None) -> dict:
+        """Per-layer physical page pools ``[P, page_len, Hkv, hd]``
+        (python list — a layer's pool donates independently) plus the
+        per-slot page table ``ptab [slots, pps]`` and length vector.
+
+        ``P = 1 (trash) + slots*pps + shared_pages``: page 0 swallows
+        out-of-capacity writes, each slot owns a fixed private page run,
+        and the tail is the ref-counted shared-prefix region managed by
+        ``repro.serve.pages.PagePool``.  The page indirection is DATA —
+        a slot's KV view is ``pool[ptab[s]]`` — so binding shared pages
+        never changes a program shape."""
+        from repro.serve.pages import identity_row, page_geometry
         cfg = self.cfg
         kv = jnp.dtype(cfg.compute_dtype)
-        shape = (slots, max_len, cfg.n_kv_heads, cfg.hd)
+        pl, pps = page_geometry(max_len, page_len)
+        if shared_pages is None:
+            shared_pages = slots * pps
+        P = 1 + slots * pps + shared_pages
+        shape = (P, pl, cfg.n_kv_heads, cfg.hd)
+        ptab = np.stack([identity_row(s, pps) for s in range(slots)])
         return {"k": [jnp.zeros(shape, kv) for _ in range(cfg.n_layers)],
                 "v": [jnp.zeros(shape, kv) for _ in range(cfg.n_layers)],
+                "ptab": jnp.asarray(ptab),
                 "pos": jnp.zeros((slots,), jnp.int32)}
 
-    def slot_cache_specs(self, slots: int, max_len: int) -> dict:
-        return jax.eval_shape(lambda: self.init_slot_cache(slots, max_len))
+    def slot_cache_specs(self, slots: int, max_len: int,
+                         page_len: int = None,
+                         shared_pages: int = None) -> dict:
+        return jax.eval_shape(lambda: self.init_slot_cache(
+            slots, max_len, page_len, shared_pages))
 
     def slot_cache_axes(self) -> dict:
-        """Logical axes of the slot pages [slots, max_len, Hkv, hd]: the
-        slots dim shards over the data axes like a batch, heads over
-        ``model`` when divisible.  The max_len dim stays UNSHARDED — the
-        per-slot scatters write at data-dependent positions, so a
-        "kvseq"-style split would turn every decode write into a
-        collective."""
-        a = ("batch", None, "kv", None)
+        """Logical axes of the page pools [P, page_len, Hkv, hd]: heads
+        shard over ``model`` when divisible.  The page dims stay
+        UNSHARDED — physical page ids are data-dependent (page-table
+        indirection), so splitting them would turn every decode write
+        into a collective."""
+        a = (None, None, "kv", None)
         L = self.cfg.n_layers
-        return {"k": [a] * L, "v": [a] * L, "pos": ()}
+        return {"k": [a] * L, "v": [a] * L, "ptab": (), "pos": ()}
 
     def slot_params(self, params) -> dict:
         """Per-layer param dicts + head params with STABLE array ids:
@@ -318,15 +336,18 @@ class DenseLM(BaseModel):
     def _rope_frac(self) -> float:
         return 0.5 if self.cfg.rope == "half" else 1.0
 
-    def _slot_attn_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
-        """Attention sub-block over the slot page.  All data-dependent
-        pieces are graph values: RoPE rows gather at ``pos``, K/V scatter
-        at (slot, pos[slot]), and the decode mask reads ``pos + 1``.  On
-        a mesh the ``shard_act`` constraints are captured as ``sharding``
-        annotations on the region nodes and replayed at lowering — the
-        same TP layout as the padded-wave path (heads over model, slots
-        over data), with the cache scatters constrained to the pages'
-        NamedShardings so the donated writes stay in place per shard."""
+    def _slot_attn_body(self, p, x, rope_cos, rope_sin, ck, cv, pos, ptab):
+        """Attention sub-block over the paged pool.  All data-dependent
+        pieces are graph values: RoPE rows gather at ``pos``, the write
+        target resolves through the page table
+        (``phys = ptab[s, pos // page_len]``), K/V scatter at
+        ``(phys, pos % page_len)``, and the masked attention reads the
+        per-slot view ``pool[ptab[s]]`` with ``pos + 1`` valid rows —
+        page indirection is data, so one program serves every binding.
+        On a mesh the ``shard_act`` constraints are captured as
+        ``sharding`` annotations on the region nodes and replayed at
+        lowering (heads over model; page dims unsharded so the donated
+        writes stay in place per shard)."""
         cfg = self.cfg
         B = x.shape[0]
         H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -345,27 +366,34 @@ class DenseLM(BaseModel):
         frac = self._rope_frac()
         q = L.apply_rope(q, cos, sin, frac)
         k = L.apply_rope(k, cos, sin, frac)
-        slots_iota = np.arange(B)
-        ck = tapir.scatter(ck, (slots_iota, pos), k.reshape(B, Hkv, hd))
-        cv = tapir.scatter(cv, (slots_iota, pos), v.reshape(B, Hkv, hd))
-        ck = shard_act(ck, "batch", None, "kv", None)
-        cv = shard_act(cv, "batch", None, "kv", None)
-        o = _decode_attention(q, ck, cv, pos + 1)
+        pidx, off = _page_coords_t(pos, page_len=int(ck.shape[1]))
+        phys = tapir.gather(ptab, (np.arange(B), pidx))
+        ck = tapir.scatter(ck, (phys, off), k.reshape(B, Hkv, hd))
+        cv = tapir.scatter(cv, (phys, off), v.reshape(B, Hkv, hd))
+        ck = shard_act(ck, None, None, "kv", None)
+        cv = shard_act(cv, None, None, "kv", None)
+        o = _paged_attention(q, ck, cv, ptab, pos + 1)
         o = shard_act(o, "batch", None, "heads", None)
         # all-gather before wo so GSPMD never k-splits it (see _attn)
         o = shard_act(o.reshape(B, 1, H * hd), "batch", None, None)
         x = x + tapir.linear(o, p["wo"])
         return shard_act(x, "batch", None, None), ck, cv
 
-    def _slot_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos):
+    def _slot_block_body(self, p, x, rope_cos, rope_sin, ck, cv, pos, ptab):
         x, ck, cv = self._slot_attn_body(p, x, rope_cos, rope_sin, ck, cv,
-                                         pos)
+                                         pos, ptab)
         x = x + self._mlp(p, self._norm(x, p["ln2"]))
         return x, ck, cv
 
-    def _slot_prefill_attn_body(self, p, x, cos, sin, ck, cv, slot):
-        """Prefill one request into slot ``slot`` (a *dynamic* start of the
-        donated cache write): K/V rows land at [slot, 0:S]."""
+    def _slot_prefill_attn_body(self, p, x, rope_cos, rope_sin, ck, cv,
+                                pos_vec, phys_vec, off_vec, prow, vlen):
+        """Prefill one request's rows into its page run (B == 1).  The
+        row targets are data: K/V land at ``(phys_vec[i], off_vec[i])``
+        (out-of-range bucket padding targets the trash page), RoPE rows
+        gather at absolute positions ``pos_vec``, and attention runs the
+        masked kernel over the slot's gathered page view so a suffix
+        prefill (start > 0, shared prefix pages already resident) is
+        bitwise-identical per row to a full prefill of the same prompt."""
         cfg = self.cfg
         B, S, _ = x.shape
         H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -378,23 +406,27 @@ class DenseLM(BaseModel):
         q = shard_act(q, None, None, "heads", None)
         k = shard_act(k, None, None, "kv", None)
         v = shard_act(v, None, None, "kv", None)
+        cos = tapir.gather(rope_cos, (pos_vec,))
+        sin = tapir.gather(rope_sin, (pos_vec,))
         frac = self._rope_frac()
         q = L.apply_rope(q, cos, sin, frac)
         k = L.apply_rope(k, cos, sin, frac)
-        ck = tapir.cache_write(ck, k, (slot, 0, 0, 0))
-        cv = tapir.cache_write(cv, v, (slot, 0, 0, 0))
-        ck = shard_act(ck, "batch", None, "kv", None)
-        cv = shard_act(cv, "batch", None, "kv", None)
-        o = tapir.attention(q, k, v, causal=True)
+        ck = tapir.scatter(ck, (phys_vec, off_vec), k.reshape(S, Hkv, hd))
+        cv = tapir.scatter(cv, (phys_vec, off_vec), v.reshape(S, Hkv, hd))
+        ck = shard_act(ck, None, None, "kv", None)
+        cv = shard_act(cv, None, None, "kv", None)
+        o = _paged_prefill_attn(q, ck, cv, prow, vlen)
         o = shard_act(o, None, None, "heads", None)
         # all-gather before wo so GSPMD never k-splits it (see _attn)
         o = shard_act(o.reshape(B, S, H * hd), None, None, None)
         x = x + tapir.linear(o, p["wo"])
         return x, ck, cv
 
-    def _slot_prefill_block_body(self, p, x, cos, sin, ck, cv, slot):
-        x, ck, cv = self._slot_prefill_attn_body(p, x, cos, sin, ck, cv,
-                                                 slot)
+    def _slot_prefill_block_body(self, p, x, rope_cos, rope_sin, ck, cv,
+                                 pos_vec, phys_vec, off_vec, prow, vlen):
+        x, ck, cv = self._slot_prefill_attn_body(
+            p, x, rope_cos, rope_sin, ck, cv, pos_vec, phys_vec, off_vec,
+            prow, vlen)
         x = x + self._mlp(p, self._norm(x, p["ln2"]))
         return x, ck, cv
 
@@ -412,11 +444,15 @@ class DenseLM(BaseModel):
     def decode_step_slots(self, sp, tokens, cache):
         """One decode step for EVERY slot.  tokens: [slots, 1] (free slots
         carry don't-care tokens).  Returns (logits [slots, vocab], cache);
-        per-slot positions advance by one, cache pages update in place
-        (scatter donation)."""
+        per-slot positions advance by one, pool pages update in place
+        (scatter donation).  The page table rides in the cache pytree as
+        data, so rebinding pages (shared prefixes, COW, parking) never
+        changes the program."""
         cfg = self.cfg
         h = self._embed({"embed": sp["embed"]}, tokens)
-        max_len = cache["k"][0].shape[1]
+        pl = cache["k"][0].shape[1]
+        ptab = cache["ptab"]
+        max_len = ptab.shape[1] * pl
         cos_t, sin_t = L.full_rope_table(max_len, cfg.hd,
                                          fraction=self._rope_frac())
         pos = cache["pos"]
@@ -425,35 +461,55 @@ class DenseLM(BaseModel):
                 for kind, fn in bodies.items()}
         for i, (kind, p) in enumerate(sp["layers"]):
             h, ck, cv = blks[kind](p, h, cos_t, sin_t,
-                                   cache["k"][i], cache["v"][i], pos)
+                                   cache["k"][i], cache["v"][i], pos, ptab)
             cache["k"][i], cache["v"][i] = ck, cv
         head = tapir.parallel_region(self._slot_head_body, name="slot_head")
         logits = head(sp["head"], h)
         cache["pos"] = pos + 1
         return logits, cache
 
-    def prefill_into_slot(self, sp, tokens, cache, slot: int, plen: int):
+    def prefill_into_slot(self, sp, tokens, cache, slot: int, plen: int,
+                          start: int = 0):
         """Insert one request into slot ``slot`` mid-decode.  tokens:
-        [1, Sb] right-padded to a power-of-two bucket (positions >= plen
-        hold don't-care tokens: causal attention keeps rows < plen and the
-        plen-1 logits exact, and decode masks the garbage rows via
-        pos[slot] = plen).  Returns (logits [1, vocab] at plen-1, cache)."""
+        [1, Sb] rows ``[start, start + Sb)`` of the prompt, right-padded
+        to a power-of-two bucket.  ``start > 0`` is a *suffix* prefill:
+        positions < start are already resident in the slot's page run
+        (shared prefix pages) and only the divergent rows run.  Padding
+        rows past ``plen`` write garbage into real offsets (decode masks
+        them via pos[slot] = plen, exactly as before); padding rows past
+        ``max_len`` are routed to the trash page so they can never
+        corrupt live pages.  Returns (logits [1, vocab] at prompt row
+        plen-1, cache)."""
         cfg = self.cfg
         Sb = tokens.shape[1]
+        pl = int(cache["k"][0].shape[1])
+        row = np.asarray(cache["ptab"][slot])
+        pps = row.shape[0]
+        max_len = pps * pl
         h = self._embed({"embed": sp["embed"]}, tokens)
-        cos_t, sin_t = L.full_rope_table(
-            max(cache["k"][0].shape[1], Sb), cfg.hd,
-            fraction=self._rope_frac())
-        cos, sin = cos_t[:Sb], sin_t[:Sb]
-        slot_s = jnp.asarray(slot, jnp.int32)
+        cos_t, sin_t = L.full_rope_table(max(max_len, Sb), cfg.hd,
+                                         fraction=self._rope_frac())
+        p_abs = start + np.arange(Sb)
+        ok = p_abs < max_len
+        pidx = np.minimum(p_abs // pl, pps - 1)
+        phys = np.where(ok, row[pidx], 0).astype(np.int32)
+        off = np.where(ok, p_abs % pl, 0).astype(np.int32)
+        pos_clip = np.minimum(p_abs, cos_t.shape[0] - 1).astype(np.int32)
+        # device arrays: rebindable region inputs, not baked-in consts
+        pos_vec = jnp.asarray(pos_clip)
+        phys_vec = jnp.asarray(phys)
+        off_vec = jnp.asarray(off)
+        prow = jnp.asarray(row)
+        vlen = jnp.asarray(start + Sb, jnp.int32)
         bodies = self._slot_prefill_bodies()
         blks = {kind: tapir.parallel_region(fn, name=f"slot_{kind}_prefill")
                 for kind, fn in bodies.items()}
         for i, (kind, p) in enumerate(sp["layers"]):
-            h, ck, cv = blks[kind](p, h, cos, sin,
-                                   cache["k"][i], cache["v"][i], slot_s)
+            h, ck, cv = blks[kind](p, h, cos_t, sin_t,
+                                   cache["k"][i], cache["v"][i],
+                                   pos_vec, phys_vec, off_vec, prow, vlen)
             cache["k"][i], cache["v"][i] = ck, cv
-        hrow = jax.lax.dynamic_slice_in_dim(h, plen - 1, 1, axis=1)
+        hrow = jax.lax.dynamic_slice_in_dim(h, plen - 1 - start, 1, axis=1)
         head = tapir.parallel_region(self._slot_head_body, name="slot_head")
         logits = head(sp["head"], hrow)
         cache["pos"] = cache["pos"].at[slot].set(plen)
@@ -498,3 +554,68 @@ def _masked_decode_attention(q, ck, cv, valid_len):
 
 
 _masked_decode_attention_jit = jax.jit(_masked_decode_attention)
+
+
+def _page_coords(pos, *, page_len):
+    """Split absolute positions into (page index, in-page offset)."""
+    pos = jnp.asarray(pos)
+    return ((pos // page_len).astype(jnp.int32),
+            (pos % page_len).astype(jnp.int32))
+
+
+def _page_coords_t(pos, *, page_len):
+    if tapir.is_traced(pos):
+        return tapir.lift(_page_coords, pos, page_len=page_len)
+    return _page_coords(pos, page_len=page_len)
+
+
+def _paged_decode_attention(q, ck, cv, ptab, valid_len):
+    """Masked attention over a per-slot *view* of the page pool.
+    q: [B,S,H,hd]; ck/cv: [P,page_len,Hkv,hd] pools; ptab: [B,pps] page
+    table.  Gathering ``pool[ptab]`` materialises each slot's logical
+    [max_len] cache (shared prefix pages + private pages in one run) and
+    the result is bitwise-identical to the unpaged layout: each query
+    row's dot products, mask, and softmax depend only on its own keys,
+    never on which pages back them."""
+    B = q.shape[0]
+    pl, Hkv, hd = ck.shape[1], ck.shape[2], ck.shape[3]
+    pps = ptab.shape[-1]
+    vk = ck[ptab].reshape(B, pps * pl, Hkv, hd)
+    vv = cv[ptab].reshape(B, pps * pl, Hkv, hd)
+    return _masked_decode_attention(q, vk, vv, valid_len)
+
+
+def _paged_attention(q, ck, cv, ptab, valid_len):
+    """Traced-aware wrapper (see ``_decode_attention``)."""
+    if any(tapir.is_traced(t) for t in (q, ck, cv, ptab, valid_len)):
+        vl = valid_len if hasattr(valid_len, "shape") else jnp.asarray(
+            valid_len, jnp.int32)
+        return tapir.lift(_paged_decode_attention, q, ck, cv, ptab, vl)
+    return _paged_decode_attention_jit(q, ck, cv, ptab, valid_len)
+
+
+def _paged_prefill_attention(q, ck, cv, prow, valid_len):
+    """Prefill attention for one slot through its page row.  q:
+    [1,S,H,hd]; prow: [pps] page ids.  Reuses the masked decode kernel so
+    a suffix prefill (rows [start, start+S)) computes each kept row
+    bitwise-identically to the full prefill of the same prompt: per-row
+    causal masking only ever reads keys < row position, which are the
+    same bytes whether they came from a shared prefix page or were just
+    written."""
+    pl, Hkv, hd = ck.shape[1], ck.shape[2], ck.shape[3]
+    pps = prow.shape[-1]
+    vk = ck[prow].reshape(1, pps * pl, Hkv, hd)
+    vv = cv[prow].reshape(1, pps * pl, Hkv, hd)
+    return _masked_decode_attention(q, vk, vv, valid_len)
+
+
+def _paged_prefill_attn(q, ck, cv, prow, valid_len):
+    if any(tapir.is_traced(t) for t in (q, ck, cv, prow, valid_len)):
+        vl = valid_len if hasattr(valid_len, "shape") else jnp.asarray(
+            valid_len, jnp.int32)
+        return tapir.lift(_paged_prefill_attention, q, ck, cv, prow, vl)
+    return _paged_prefill_attention_jit(q, ck, cv, prow, valid_len)
+
+
+_paged_decode_attention_jit = jax.jit(_paged_decode_attention)
+_paged_prefill_attention_jit = jax.jit(_paged_prefill_attention)

@@ -1,7 +1,9 @@
 from .engine import (ServeConfig, make_prefill_step, make_decode_step,
                      cache_shardings, slot_cache_shardings,
                      pin_slot_params, Request, ServingEngine)
+from .pages import PagePool, page_geometry, preempt_cost
 
 __all__ = ["ServeConfig", "make_prefill_step", "make_decode_step",
            "cache_shardings", "slot_cache_shardings", "pin_slot_params",
-           "Request", "ServingEngine"]
+           "Request", "ServingEngine", "PagePool", "page_geometry",
+           "preempt_cost"]

@@ -64,6 +64,8 @@ from repro.core.tapir import (TapirConfig, cache_stats, invalidate_mesh,
 from repro.dist.fault import Fault, FaultInjector, StragglerWatchdog
 from repro.dist.sharding import (batch_pspec, logical_to_pspec,
                                  param_shardings)
+from repro.serve.pages import (PagePool, copy_cache_pages, identity_row,
+                               preempt_cost, private_page)
 
 
 @dataclass(frozen=True)
@@ -79,12 +81,26 @@ class ServeConfig:
     # jit — see module docstring).  False = per-op control (the
     # decode_region_vs_per_op A/B).
     regions: bool = True
-    # what to do with a request whose prompt + max_new overflows the slot
-    # page: "strict" raises at admission (default — an overflow would
-    # silently drop K/V rows and corrupt the output); "reject" marks it
-    # done=False, counts it in ``last_stats["rejected"]`` and serves the
-    # rest of the queue.
+    # admission policy: "strict" raises when a request's prompt + max_new
+    # overflows the slot page (default — an overflow would silently drop
+    # K/V rows and corrupt the output); "reject" marks it done=False,
+    # counts it in ``last_stats["rejected"]`` and serves the rest of the
+    # queue; "slo" additionally sheds requests whose ``deadline_s`` the
+    # engine estimates it can no longer meet (observed step p50 x tokens
+    # remaining), so a backed-up queue fails fast instead of late.
     admit_policy: str = "strict"
+    # -- page policy (shared prefixes / preemption; see serve/pages.py) ---
+    #: hash prompt prefixes at page granularity and bind resident shared
+    #: pages on admit, prefilling only the divergent suffix
+    prefix_sharing: bool = True
+    #: KV page length (None: 64 when it divides max_len, else max_len);
+    #: must divide max_len — see ``pages.page_geometry``
+    page_len: Optional[int] = None
+    #: shared-region size in pages (None: one slot's worth per slot)
+    shared_pages: Optional[int] = None
+    #: eviction arm for priority preemption: "auto" picks park vs replay
+    #: by the ``preempt_cost`` roofline; "park"/"replay" force one arm
+    preempt_mode: str = "auto"
     # -- fault tolerance (slot path; see ``_run_slots``) ------------------
     #: deterministic fault source, consulted before every pool decode step
     fault_injector: Optional[FaultInjector] = None
@@ -113,6 +129,27 @@ class ServeConfig:
     #: "off" | "read" (probe, never publish — replicas behind a shared
     #: read-only store) | "readwrite"
     cache_mode: str = "readwrite"
+
+    def __post_init__(self):
+        # fail at construction, not deep inside the decode loop
+        if self.admit_policy not in ("strict", "reject", "slo"):
+            raise ValueError(
+                f"admit_policy must be 'strict', 'reject' or 'slo', "
+                f"got {self.admit_policy!r}")
+        if self.preempt_mode not in ("auto", "park", "replay"):
+            raise ValueError(
+                f"preempt_mode must be 'auto', 'park' or 'replay', "
+                f"got {self.preempt_mode!r}")
+        if self.shed_base < 0 or self.shed_cap < 0:
+            raise ValueError(
+                f"shed_base/shed_cap must be >= 0, got "
+                f"{self.shed_base}/{self.shed_cap}")
+        if self.page_len is not None and self.page_len <= 0:
+            raise ValueError(f"page_len must be positive, got "
+                             f"{self.page_len}")
+        if self.shared_pages is not None and self.shared_pages < 0:
+            raise ValueError(f"shared_pages must be >= 0, got "
+                             f"{self.shared_pages}")
 
     def tapir_config(self) -> TapirConfig:
         if self.program_cache_dir and self.cache_mode == "readwrite":
@@ -151,13 +188,16 @@ def cache_shardings(model, mesh, batch: int, max_len: int):
                       model.cache_axes(), mesh)
 
 
-def slot_cache_shardings(model, mesh, slots: int, max_len: int):
+def slot_cache_shardings(model, mesh, slots: int, max_len: int,
+                         page_len: Optional[int] = None,
+                         shared_pages: Optional[int] = None):
     """NamedSharding tree for the slot-paged decode cache: per-layer
-    ``[slots, max_len, Hkv, hd]`` pages with slots over the data axes and
-    heads over ``model`` (when divisible); the ``max_len`` dim stays
-    unsharded — per-slot scatters write at data-dependent positions, and
-    sharding that dim would turn every decode write into a collective."""
-    return _shardings(model.slot_cache_specs(slots, max_len),
+    ``[P, page_len, Hkv, hd]`` page pools with heads over ``model`` (when
+    divisible); the page dims stay unsharded — per-slot scatters write at
+    data-dependent pages, and sharding those dims would turn every decode
+    write into a collective."""
+    return _shardings(model.slot_cache_specs(slots, max_len, page_len,
+                                             shared_pages),
                       model.slot_cache_axes(), mesh)
 
 
@@ -199,15 +239,23 @@ class _EngineFault(Exception):
 @dataclass
 class _SlotRunState:
     """Everything a slot session needs to resume: the device state
-    (``cache`` pages + ``rng``) checkpoints as one pytree; the host-side
-    scheduler fields travel in the checkpoint's JSON ``meta``.  All of it
-    rolls back together on restore, so replay is deterministic."""
+    (``cache`` pages + page table + ``rng``) checkpoints as one pytree —
+    prefix pages live in the pool ONCE, never per-referencing-slot; the
+    host-side scheduler and page-policy fields travel in the checkpoint's
+    JSON ``meta``.  All of it rolls back together on restore, so replay
+    is deterministic."""
     cache: Any
     rng: Any
     slot_idx: list               # per-slot index into ``requests``, -1 free
     slot_steps: list             # per-slot decode-step budget used
     tokens: np.ndarray           # [slots, 1] next feed token per slot
-    qi: int = 0                  # queue cursor
+    pool: Any = None             # PagePool: shared-prefix / parking state
+    ptab_host: Any = None        # np [slots, pps] mirror of cache["ptab"]
+    pending: list = field(default_factory=list)  # indices awaiting a slot
+    fed: list = field(default_factory=list)      # per-slot out tokens fed
+    slot_seq: list = field(default_factory=list)  # admission order stamp
+    seq: int = 0                 # admission sequence counter
+    parked: dict = field(default_factory=dict)   # rid -> feed-state record
     step: int = 0                # completed pool-wide decode steps
     occ_sum: float = 0.0
     st: dict = field(default_factory=dict)
@@ -251,8 +299,28 @@ class Request:
     rid: int
     prompt: np.ndarray           # [S] int32
     max_new: int = 32
+    #: scheduling priority, 0 (lowest) .. 9 (highest).  A waiting
+    #: higher-priority request may preempt a running lower-priority slot.
+    priority: int = 0
+    #: SLO deadline in seconds from run start (admit_policy="slo" sheds
+    #: requests the engine estimates it can no longer finish in time)
+    deadline_s: Optional[float] = None
+    #: earliest pool decode step at which the request becomes
+    #: schedulable (0 = available immediately) — lets tests and traces
+    #: model staggered arrivals deterministically
+    arrival_step: int = 0
     out: list = field(default_factory=list)
     done: bool = False
+
+    def __post_init__(self):
+        if not 0 <= int(self.priority) <= 9:
+            raise ValueError(
+                f"request {self.rid}: priority must be in 0..9, got "
+                f"{self.priority}")
+        if self.arrival_step < 0:
+            raise ValueError(
+                f"request {self.rid}: arrival_step must be >= 0, got "
+                f"{self.arrival_step}")
 
 
 class ServingEngine:
@@ -340,10 +408,13 @@ class ServingEngine:
         with their NamedShardings up front so the donated scatter writes
         alias in place per shard (an unsharded page would reshard on the
         first constrained write and break the donation)."""
-        cache = self.model.init_slot_cache(self.slots, self.max_len)
+        cfg = self.cfg
+        cache = self.model.init_slot_cache(self.slots, self.max_len,
+                                           cfg.page_len, cfg.shared_pages)
         if self.mesh is not None and getattr(self.mesh, "size", 1) > 1:
             sh = slot_cache_shardings(self.model, self.mesh, self.slots,
-                                      self.max_len)
+                                      self.max_len, cfg.page_len,
+                                      cfg.shared_pages)
             cache = jax.tree_util.tree_map(jax.device_put, cache, sh)
         return cache
 
@@ -365,20 +436,25 @@ class ServingEngine:
 
     def _slot_state_template(self):
         """ShapeDtypeStruct pytree of the checkpointable device state."""
-        return {"cache": self.model.slot_cache_specs(self.slots,
-                                                     self.max_len),
+        return {"cache": self.model.slot_cache_specs(
+                    self.slots, self.max_len, self.cfg.page_len,
+                    self.cfg.shared_pages),
                 "rng": jax.ShapeDtypeStruct((2,), jnp.uint32)}
 
     def _slot_state_shardings(self):
         if self.mesh is None or getattr(self.mesh, "size", 1) <= 1:
             return None
         return {"cache": slot_cache_shardings(self.model, self.mesh,
-                                              self.slots, self.max_len),
+                                              self.slots, self.max_len,
+                                              self.cfg.page_len,
+                                              self.cfg.shared_pages),
                 "rng": NamedSharding(self.mesh, P())}
 
     def _fresh_slot_state(self, requests) -> _SlotRunState:
         for r in requests:
             r.out, r.done = [], False
+        pool = PagePool(self.slots, self.max_len, self.cfg.page_len,
+                        self.cfg.shared_pages)
         return _SlotRunState(
             cache=self._init_slot_cache(),
             # greedy today; checkpointed so a sampler slots into the same
@@ -387,8 +463,16 @@ class ServingEngine:
             slot_idx=[-1] * self.slots,
             slot_steps=[0] * self.slots,
             tokens=np.zeros((self.slots, 1), np.int32),
+            pool=pool,
+            ptab_host=np.stack([identity_row(s, pool.pps)
+                                for s in range(self.slots)]),
+            pending=list(range(len(requests))),
+            fed=[0] * self.slots,
+            slot_seq=[0] * self.slots,
             st={"tokens": 0, "admitted": 0, "rejected": 0, "preempted": 0,
-                "decode_steps": 0})
+                "decode_steps": 0, "prefix_hits": 0,
+                "prefix_tokens_saved": 0, "preemptions": 0, "parked": 0,
+                "replayed": 0, "slo_shed": 0})
 
     def _save_slot_ckpt(self, rs: _SlotRunState, requests, ft: dict) -> None:
         """One atomic snapshot: KV pages + per-slot pos + RNG as the device
@@ -398,13 +482,22 @@ class ServingEngine:
         checkpoint is deterministic."""
         if self.cfg.ckpt_dir is None:
             return
-        meta = {"qi": rs.qi, "step": rs.step,
+        meta = {"step": rs.step,
+                "pending": [int(i) for i in rs.pending],
                 "slot_idx": [int(i) for i in rs.slot_idx],
                 "slot_steps": [int(s) for s in rs.slot_steps],
                 "tokens": [int(t) for t in rs.tokens[:, 0]],
+                "fed": [int(f) for f in rs.fed],
+                "slot_seq": [int(q) for q in rs.slot_seq],
+                "seq": int(rs.seq),
                 "outs": {str(i): [int(t) for t in requests[i].out]
-                         for i in range(rs.qi)},
-                "done": [i for i in range(rs.qi) if requests[i].done],
+                         for i in range(len(requests)) if requests[i].out},
+                "done": [i for i, r in enumerate(requests) if r.done],
+                "parked": {str(r): {"tok": int(v["tok"]),
+                                    "steps": int(v["steps"]),
+                                    "fed": int(v["fed"])}
+                           for r, v in rs.parked.items()},
+                "pool": rs.pool.to_meta(),
                 "st": {k: int(v) for k, v in rs.st.items()},
                 "occ_sum": float(rs.occ_sum)}
         save_checkpoint(self.cfg.ckpt_dir, rs.step,
@@ -439,7 +532,16 @@ class ServingEngine:
                 slot_idx=list(meta["slot_idx"]),
                 slot_steps=list(meta["slot_steps"]),
                 tokens=np.asarray(meta["tokens"], np.int32).reshape(-1, 1),
-                qi=int(meta["qi"]), step=int(meta["step"]),
+                pool=PagePool.from_meta(meta["pool"], self.slots,
+                                        self.max_len, self.cfg.page_len,
+                                        self.cfg.shared_pages),
+                ptab_host=np.array(state["cache"]["ptab"]),
+                pending=list(meta["pending"]),
+                fed=list(meta["fed"]),
+                slot_seq=list(meta["slot_seq"]), seq=int(meta["seq"]),
+                parked={int(r): dict(v)
+                        for r, v in meta["parked"].items()},
+                step=int(meta["step"]),
                 occ_sum=float(meta["occ_sum"]), st=dict(meta["st"]))
         return self._fresh_slot_state(requests)
 
@@ -478,6 +580,11 @@ class ServingEngine:
               "checkpoints": 0, "shed_steps": 0, "shed_rounds": 0}
         self._cache_snap = self._snap_cache()
         t0 = time.perf_counter()
+        # wall-clock observability rides OUTSIDE the checkpointed stats
+        # ("_"-keys are stripped before they reach ``last_stats``)
+        ft["_t0"] = t0
+        ft["_ttft"] = []
+        ft["_qwait"] = []
         resume = False
         while True:
             try:
@@ -498,21 +605,245 @@ class ServingEngine:
                 self._handle_fault(ef.fault, ft)
                 resume = True
         st = rs.st
+        ttft = ft.pop("_ttft")
+        qwait = ft.pop("_qwait")
+        ft.pop("_t0")
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
         st.update(ft, straggler_steps=len(wd.flagged),
-                  step_p50=wd.p50, step_p95=wd.p95)
+                  step_p50=wd.p50, step_p95=wd.p95,
+                  ttft_p50=pct(ttft, 50), ttft_p95=pct(ttft, 95),
+                  queue_wait_p50=pct(qwait, 50),
+                  queue_wait_p95=pct(qwait, 95))
         self._set_stats(st, rs.occ_sum, time.perf_counter() - t0)
         return requests
+
+    # -- page-policy helpers ---------------------------------------------
+    def _push_ptab(self, rs: _SlotRunState) -> None:
+        """Mirror the host page table to the device: page indirection is
+        DATA, so this is the only thing a rebinding ever changes."""
+        t = jnp.asarray(rs.ptab_host)
+        if self.mesh is not None and getattr(self.mesh, "size", 1) > 1:
+            t = jax.device_put(t, NamedSharding(self.mesh, P()))
+        rs.cache["ptab"] = t
+
+    def _release(self, s: int, rs: _SlotRunState, slot_req) -> None:
+        """Free slot ``s``: drop its shared-prefix binding and reset its
+        page-table row to the private identity run."""
+        rs.pool.unbind(s)
+        slot_req[s] = None
+        rs.slot_idx[s] = -1
+        rs.ptab_host[s] = identity_row(s, rs.pool.pps)
+        self._push_ptab(rs)
+        rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+
+    def _flops_per_tok(self) -> float:
+        if getattr(self, "_flops_tok", None) is None:
+            self._flops_tok = 2.0 * sum(
+                int(np.prod(v.shape))
+                for v in jax.tree_util.tree_leaves(self.params)
+                if hasattr(v, "shape"))
+        return self._flops_tok
+
+    def _page_bytes(self, rs: _SlotRunState) -> int:
+        """Bytes one page copy moves (K+V, all layers)."""
+        k0 = rs.cache["k"][0]
+        per = int(np.prod(k0.shape[1:])) * k0.dtype.itemsize
+        return per * len(rs.cache["k"]) * 2
+
+    def _admit_into(self, requests, idx: int, s: int, rs: _SlotRunState,
+                    slot_req, ft: dict) -> None:
+        """Admit ``requests[idx]`` into free slot ``s``: resume it from
+        parked pages, replay it from its recorded tokens, or prefill it
+        fresh — binding any resident shared prefix first so only the
+        divergent suffix runs."""
+        from repro.models.layers import bucket_pow2
+        model, cfg, pool, sp = self.model, self.cfg, rs.pool, self._sp
+        r = requests[idx]
+        plen = len(r.prompt)
+        # the slot page run must hold every position a decode step will
+        # write: rows [0, plen + max_new - 1).  Past capacity the scatter
+        # would DROP new K/V rows while sampling continued — corrupt
+        # output, so reject at admission instead.
+        if plen + r.max_new - 1 > self.max_len:
+            if cfg.admit_policy in ("reject", "slo"):
+                rs.pending.remove(idx)
+                rs.st["rejected"] += 1
+                return
+            raise ValueError(
+                f"request {r.rid}: prompt ({plen}) + "
+                f"max_new ({r.max_new}) overflows the "
+                f"slot page (max_len={self.max_len})")
+        rs.pending.remove(idx)
+        if r.rid in pool.parked:
+            # resume: pages copied back bitwise, feed state restored —
+            # the continuation is indistinguishable from never evicting
+            rec = pool.resume(rs.cache, r.rid, s)
+            row = identity_row(s, pool.pps)
+            ent = pool.entries.get(rec["entry"]) if rec["entry"] else None
+            if ent is not None:
+                row[:rec["bound"]] = ent.pages[:rec["bound"]]
+            rs.ptab_host[s] = row
+            self._push_ptab(rs)
+            rs.cache["pos"] = rs.cache["pos"].at[s].set(rec["length"])
+            hp = rs.parked.pop(r.rid)
+            rs.tokens[s, 0] = hp["tok"]
+            rs.slot_steps[s] = hp["steps"]
+            rs.fed[s] = hp["fed"]
+            slot_req[s] = r
+            rs.slot_idx[s] = idx
+            rs.seq += 1
+            rs.slot_seq[s] = rs.seq
+            return
+        replaying = bool(r.out)
+        prompt = np.asarray(r.prompt, np.int32)
+        k, pages = pool.lookup(prompt) if cfg.prefix_sharing else (0, [])
+        row = identity_row(s, pool.pps)
+        start = 0
+        if k > 0:
+            pool.bind(s, prompt, k)
+            if plen == k * pool.page_len:
+                # exact cover: the prompt's last token must re-run for
+                # its logits, and its K/V write would scatter into the
+                # boundary shared page — COW it into the private run
+                copy_cache_pages(rs.cache, [pages[k - 1]],
+                                 [private_page(s, k - 1, pool.pps)])
+                pool.slot_bound[s] = k - 1
+                row[:k - 1] = pages[:k - 1]
+                start = plen - 1
+            else:
+                row[:k] = pages[:k]
+                start = k * pool.page_len
+            rs.st["prefix_hits"] += 1
+            rs.st["prefix_tokens_saved"] += start
+        rs.ptab_host[s] = row
+        self._push_ptab(rs)
+        suf = prompt[start:]
+        padded = np.zeros((1, min(bucket_pow2(len(suf)), self.max_len)),
+                          np.int32)
+        padded[0, :len(suf)] = suf
+        logits, rs.cache = model.prefill_into_slot(
+            sp, jnp.asarray(padded), rs.cache, s, plen, start=start)
+        tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+        if not replaying:
+            r.out.append(tok)
+            rs.st["admitted"] += 1
+            rs.st["tokens"] += 1
+            now = time.perf_counter()
+            ft["_qwait"].append(now - ft["_t0"])
+            ft["_ttft"].append(now - ft["_t0"])
+        if cfg.prefix_sharing and k == 0:
+            # total miss: publish the prompt-covering pages so the NEXT
+            # request sharing this prefix prefills only its suffix
+            pool.publish(rs.cache, s, prompt)
+        rs.fed[s] = 1
+        rs.tokens[s, 0] = r.out[0]
+        if not replaying and len(r.out) >= r.max_new:
+            r.done = True
+            self._release_fresh(s, rs)
+            return
+        slot_req[s] = r
+        rs.slot_idx[s] = idx
+        # a replayed request already spent the steps that produced its
+        # recorded tokens; the budget continues, it does not reset
+        rs.slot_steps[s] = len(r.out) - 1 if replaying else 0
+        rs.seq += 1
+        rs.slot_seq[s] = rs.seq
+
+    def _release_fresh(self, s: int, rs: _SlotRunState) -> None:
+        """Release a slot that finished at prefill (never entered decode)."""
+        rs.pool.unbind(s)
+        rs.ptab_host[s] = identity_row(s, rs.pool.pps)
+        self._push_ptab(rs)
+        rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+
+    def _slo_shed(self, requests, elig: list, rs: _SlotRunState,
+                  ft: dict, wd) -> list:
+        """admit_policy="slo": drop eligible requests whose deadline the
+        engine estimates it can no longer meet (remaining tokens at the
+        observed p50 step time), so they fail fast instead of late."""
+        if self.cfg.admit_policy != "slo":
+            return elig
+        now = time.perf_counter() - ft["_t0"]
+        keep = []
+        for i in elig:
+            r = requests[i]
+            if r.deadline_s is not None:
+                est = (r.max_new - len(r.out)) * (wd.p50 or 0.0)
+                if now + est > r.deadline_s:
+                    rs.pending.remove(i)
+                    rs.st["rejected"] += 1
+                    rs.st["slo_shed"] += 1
+                    continue
+            keep.append(i)
+        return keep
+
+    def _preempt_for(self, requests, idx: int, rs: _SlotRunState,
+                     slot_req, ft: dict, wd) -> Optional[int]:
+        """Priority preemption: evict the lowest-priority running slot
+        (ties: most recently admitted) iff ``requests[idx]`` outranks it
+        STRICTLY.  The victim is parked (pages copied into the shared
+        region) or dropped for replay-from-prefix — whichever the
+        ``preempt_cost`` roofline prices cheaper — and re-enters the
+        pending queue.  Returns the freed slot, or None."""
+        cfg, pool = self.cfg, rs.pool
+        occ = [(requests[rs.slot_idx[s]].priority, -rs.slot_seq[s], s)
+               for s in range(self.slots) if slot_req[s] is not None]
+        if not occ:
+            return None
+        vprio, _, s = min(occ)
+        if requests[idx].priority <= vprio:
+            return None
+        victim = slot_req[s]
+        length = int(np.asarray(rs.cache["pos"])[s])
+        arm = cfg.preempt_mode
+        if arm == "auto":
+            cm = CostModel() if cfg.target == "tpu" else CPU_COST_MODEL
+            arm = preempt_cost(
+                cm, length=length,
+                prefix_len=pool.slot_bound[s] * pool.page_len,
+                n_out=len(victim.out), page_bytes=self._page_bytes(rs),
+                pps=pool.pps, page_len=pool.page_len,
+                model_flops_per_tok=self._flops_per_tok(),
+                step_s=(wd.p50 or 1e-3)).arm
+        if arm == "park":
+            if pool.park(rs.cache, victim.rid, s, length):
+                rs.parked[victim.rid] = {"tok": int(rs.tokens[s, 0]),
+                                         "steps": rs.slot_steps[s],
+                                         "fed": rs.fed[s]}
+                rs.st["parked"] += 1
+            else:
+                arm = "replay"     # shared region full: drop the pages
+        if arm == "replay":
+            pool.unbind(s)
+            rs.st["replayed"] += 1
+        rs.st["preemptions"] += 1
+        rs.pending.append(rs.slot_idx[s])
+        slot_req[s] = None
+        rs.slot_idx[s] = -1
+        rs.ptab_host[s] = identity_row(s, pool.pps)
+        self._push_ptab(rs)
+        rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+        return s
 
     def _slot_session(self, requests, max_steps: int, continuous: bool,
                       rs: _SlotRunState, ft: dict,
                       wd: StragglerWatchdog) -> None:
-        from repro.models.layers import bucket_pow2
         model, cfg = self.model, self.cfg
         sp = self._sp
         injector = cfg.fault_injector
+
+        def eligible():
+            # highest priority first; FIFO (submission index) within one
+            return sorted((i for i in rs.pending
+                           if requests[i].arrival_step <= rs.step),
+                          key=lambda i: (-requests[i].priority, i))
+
         slot_req: list[Optional[Request]] = [
             requests[i] if i >= 0 else None for i in rs.slot_idx]
-        while rs.qi < len(requests) or any(r is not None for r in slot_req):
+        while rs.pending or any(r is not None for r in slot_req):
             if rs.backoff > 0:
                 # shedding: admission paused, existing slots keep draining
                 rs.backoff -= 1
@@ -520,48 +851,29 @@ class ServingEngine:
             # -- admission: continuous fills ANY free slot on every
             # tick; wave only refills once the whole pool drained
             elif continuous or all(r is None for r in slot_req):
-                for s in range(self.slots):
-                    if rs.qi >= len(requests):
+                elig = self._slo_shed(requests, eligible(), rs, ft, wd)
+                for idx in elig:
+                    s = next((t for t in range(self.slots)
+                              if slot_req[t] is None), None)
+                    if s is None:
                         break
-                    if slot_req[s] is not None:
-                        continue
-                    idx = rs.qi
-                    r = requests[idx]
-                    rs.qi += 1
-                    plen = len(r.prompt)
-                    # the slot page must hold every position a decode
-                    # step will write: rows [0, plen + max_new - 1).
-                    # Past capacity the scatter would DROP new K/V
-                    # rows while sampling continued — corrupt output,
-                    # so reject at admission instead.
-                    if plen + r.max_new - 1 > self.max_len:
-                        if cfg.admit_policy == "reject":
-                            rs.st["rejected"] += 1
-                            continue
-                        raise ValueError(
-                            f"request {r.rid}: prompt ({plen}) + "
-                            f"max_new ({r.max_new}) overflows the "
-                            f"slot page (max_len={self.max_len})")
-                    padded = np.zeros(
-                        (1, min(bucket_pow2(plen), self.max_len)),
-                        np.int32)
-                    padded[0, :plen] = np.asarray(r.prompt)
-                    logits, rs.cache = model.prefill_into_slot(
-                        sp, jnp.asarray(padded), rs.cache, s, plen)
-                    tok = int(np.asarray(jnp.argmax(logits, -1))[0])
-                    r.out.append(tok)
-                    rs.st["admitted"] += 1
-                    rs.st["tokens"] += 1
-                    if len(r.out) >= r.max_new:
-                        r.done = True
-                        rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
-                    else:
-                        slot_req[s] = r
-                        rs.slot_idx[s] = idx
-                        rs.slot_steps[s] = 0
-                        rs.tokens[s, 0] = tok
+                    self._admit_into(requests, idx, s, rs, slot_req, ft)
+                if continuous:
+                    # no free slot left: a strictly higher-priority
+                    # arrival may evict one running victim per tick
+                    elig = eligible()
+                    if elig and all(r is not None for r in slot_req):
+                        s = self._preempt_for(requests, elig[0], rs,
+                                              slot_req, ft, wd)
+                        if s is not None:
+                            self._admit_into(requests, elig[0], s, rs,
+                                             slot_req, ft)
             if not any(r is not None for r in slot_req):
-                continue    # everyone finished at prefill; admit more
+                if rs.pending:
+                    # nothing runnable yet (future arrival_step): advance
+                    # the scheduler clock without a decode step
+                    rs.step += 1
+                continue
             # -- injected faults for the upcoming pool step: hard faults
             # abort the session (the recovery loop restores); straggle
             # slows THIS step so the watchdog sees it like a real one
@@ -589,7 +901,15 @@ class ServingEngine:
                 if r is None:
                     continue
                 tok = int(nxt[s])
+                if rs.fed[s] < len(r.out):
+                    # replaying a preempted request: this token is
+                    # already recorded — feed the record forward, count
+                    # nothing (greedy decode re-derives the same token)
+                    rs.tokens[s, 0] = r.out[rs.fed[s]]
+                    rs.fed[s] += 1
+                    continue
                 r.out.append(tok)
+                rs.fed[s] += 1
                 rs.st["tokens"] += 1
                 rs.tokens[s, 0] = tok
                 rs.slot_steps[s] += 1
@@ -598,9 +918,7 @@ class ServingEngine:
                 if r.done or rs.slot_steps[s] >= max_steps:
                     if not r.done:
                         rs.st["preempted"] += 1
-                    slot_req[s] = None     # out of budget: free, not done
-                    rs.slot_idx[s] = -1
-                    rs.cache["pos"] = rs.cache["pos"].at[s].set(0)
+                    self._release(s, rs, slot_req)  # budget/done: free
             rs.step += 1
             # -- straggler policy: sustained straggle sheds admission with
             # bounded exponential backoff; persisting past the budget, it

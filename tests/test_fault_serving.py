@@ -273,3 +273,75 @@ result = {"step": step, "vals_equal": vals_equal, "placed": placed,
     assert r["step"] == 3, r
     assert r["vals_equal"] and r["placed"], r
     assert r["n_devs"] == [4], r
+
+
+def test_mesh_preempt_restore_and_prefix_sharing_bitwise():
+    """ISSUE 9 on a TP mesh: a priority-5 arrival evicts the running
+    priority-0 slot (park arm: pages copied within the sharded pool),
+    the victim restores bitwise; and shared-prefix binding produces the
+    same tokens as the single-device unshared engine.  Page copies and
+    ptab pushes must respect the ("kv" heads) sharding — any axis mixup
+    breaks bitwise, not just placement."""
+    body = """
+import dataclasses
+import repro.configs as C
+from repro.models.base import get_model
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.launch.mesh import make_test_mesh
+
+cfg = dataclasses.replace(C.get_smoke("qwen2_5_3b"),
+                          compute_dtype="float32")
+model = get_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+low_p = rng.integers(1, 100, size=6).astype(np.int32)
+high_p = rng.integers(1, 100, size=5).astype(np.int32)
+prefix = rng.integers(1, 100, size=64).astype(np.int32)
+sufs = [rng.integers(1, 100, size=4).astype(np.int32) for _ in range(3)]
+
+def preempt_reqs(with_prio):
+    return [Request(rid=0, prompt=low_p.copy(), max_new=12,
+                    priority=0),
+            Request(rid=1, prompt=high_p.copy(), max_new=3,
+                    priority=5 if with_prio else 0,
+                    arrival_step=3 if with_prio else 0)]
+
+def prefix_reqs():
+    return [Request(rid=i, prompt=np.concatenate([prefix, s]),
+                    max_new=4) for i, s in enumerate(sufs)]
+
+# single-device references: uncontended FIFO + unshared prefill
+ref_pre = ServingEngine(model, params, batch=1, max_len=64,
+                        cfg=ServeConfig(target="cpu")).run(
+    preempt_reqs(False))
+ref_pfx = ServingEngine(model, params, batch=2, max_len=128,
+                        cfg=ServeConfig(target="cpu",
+                                        prefix_sharing=False)).run(
+    prefix_reqs())
+
+mesh = make_test_mesh(2, 2)
+eng = ServingEngine(model, params, mesh=mesh, batch=1, max_len=64,
+                    cfg=ServeConfig(target="cpu", preempt_mode="park"))
+got_pre = eng.run(preempt_reqs(True))
+eng2 = ServingEngine(model, params, mesh=mesh, batch=2, max_len=128,
+                     cfg=ServeConfig(target="cpu"))
+got_pfx = eng2.run(prefix_reqs())
+
+result = {
+    "preempt_bitwise": all(a.out == b.out and a.done and b.done
+                           for a, b in zip(ref_pre, got_pre)),
+    "preempt_stats": {k: eng.last_stats[k] for k in
+                      ("preemptions", "parked", "replayed")},
+    "prefix_bitwise": all(a.out == b.out and a.done and b.done
+                          for a, b in zip(ref_pfx, got_pfx)),
+    "prefix_stats": {k: eng2.last_stats[k] for k in
+                     ("prefix_hits", "prefix_tokens_saved")},
+}
+"""
+    r = run_mesh_subprocess(body, timeout=560, devices=4)
+    assert r["preempt_bitwise"], r
+    assert r["preempt_stats"] == {"preemptions": 1, "parked": 1,
+                                  "replayed": 0}, r
+    assert r["prefix_bitwise"], r
+    assert r["prefix_stats"] == {"prefix_hits": 2,
+                                 "prefix_tokens_saved": 128}, r

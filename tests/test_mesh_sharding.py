@@ -298,12 +298,14 @@ def test_captured_constraint_observable_in_lowered_computation():
         with jax.set_mesh(mesh), use(TapirConfig(mode="tapir")):
             x = jax.random.normal(jax.random.PRNGKey(1),
                                   (2, 1, cfg.d_model))
-            ck = jnp.zeros((2, 32, cfg.n_kv_heads, cfg.hd), jnp.float32)
+            # page-pool layout: 2 slots x 1 page (pl=32) + trash + shared
+            ck = jnp.zeros((5, 32, cfg.n_kv_heads, cfg.hd), jnp.float32)
             cv = jnp.zeros_like(ck)
             pos = jnp.asarray([3, 0], jnp.int32)
+            ptab = jnp.asarray([[1], [2]], jnp.int32)
             cos_t, sin_t = L.full_rope_table(32, cfg.hd)
             g = tapir.trace_region(model._slot_block_body, p0, x,
-                                   cos_t, sin_t, ck, cv, pos)
+                                   cos_t, sin_t, ck, cv, pos, ptab)
             ann = [list(n.sharding) for n in g.nodes.values()
                    if n.sharding]
             result["n_annotated"] = len(ann)

@@ -823,6 +823,117 @@ def bench_kernel_vs_jnp(iters: int = 30, json_path="BENCH_kernel.json"):
     return out
 
 
+# ---------------------------------------------------------------------------
+# train_region_vs_per_op: region-captured training step (ISSUE 10 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def bench_train_region_vs_per_op(iters: int = 4, check_steps: int = 2,
+                                 json_path="BENCH_train.json"):
+    """One full training step (loss -> grads -> AdamW) on the qwen smoke
+    model: per-op library-call usage (``regions=False``, no outer jit —
+    ``jax.value_and_grad`` retraces and every op dispatches its own jit
+    unit) vs the region-captured step (joint fwd+bwd task graph compiled
+    once, replayed from the program cache with params + optimizer state
+    donated).
+
+    Correctness gates before timing: loss bitwise-equal across
+    ``check_steps`` steps on a fixed seed, params + opt state bitwise at
+    the end, and every param/mu/nu leaf updated IN PLACE on the replayed
+    step (buffer-pointer identity).  Float32 compute: XLA CPU emulates
+    bf16 by upcasting and re-rounds wherever fusion boundaries land, so
+    bf16 bitwise across different jit partitionings is not well-defined
+    (see tests/test_train_region.py)."""
+    import dataclasses
+
+    import repro.configs as Cfg
+    from repro.models.base import get_model
+    from repro.optim import AdamWConfig, adamw_update
+    from repro.train import TrainConfig, init_state, make_region_train_step
+
+    cfg = dataclasses.replace(Cfg.get_smoke("qwen2_5_3b"),
+                              compute_dtype="float32")
+    model = get_model(cfg)
+    rng = np.random.default_rng(0)
+    toks = [rng.integers(1, min(cfg.vocab, 100), size=(2, 16))
+            for _ in range(max(check_steps, iters) + 1)]
+    batches = [{"tokens": jnp.asarray(t, jnp.int32),
+                "labels": jnp.asarray(t, jnp.int32)} for t in toks]
+    opt_cfg = AdamWConfig(lr=3e-4, total_steps=64, warmup_steps=1)
+    per_op_tap = dataclasses.replace(
+        TrainConfig(mode="tapir", remat="full").tapir_config(),
+        regions=False)
+
+    def per_op_step(state, b):
+        def loss_fn(p):
+            with use(per_op_tap):
+                return model.loss(p, b)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        p2, o2, m = adamw_update(state["params"], grads, state["opt"],
+                                 opt_cfg)
+        return {"params": p2, "opt": o2}, {"loss": loss, **m}
+
+    # correctness: bitwise losses + state, and in-place donation.  The
+    # reference is the JITTED per-op step — eager per-op dispatch and a
+    # single jit differ in the last f32 ulp on CPU (fusion moves where
+    # elementwise chains round), so "bitwise" is always against the
+    # canonical compiled reference, same as tests/test_train_region.py.
+    clear_cache()
+    ref_step = jax.jit(per_op_step)
+    cap_step, _ = make_region_train_step(
+        model, opt_cfg, mesh=None, cfg=TrainConfig(mode="tapir",
+                                                   remat="auto"))
+    ref = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    cap = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    bitwise = True
+    for i in range(check_steps):
+        ref, mr = ref_step(ref, batches[i])
+        cap, mc = cap_step(cap, batches[i])
+        bitwise &= bool(np.asarray(mr["loss"]).tobytes()
+                        == np.asarray(mc["loss"]).tobytes())
+    leaves = lambda s: jax.tree_util.tree_leaves(s["params"]) \
+        + jax.tree_util.tree_leaves(s["opt"])                    # noqa: E731
+    bitwise &= all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                   for a, b in zip(leaves(ref), leaves(cap)))
+    ptr = lambda s: [l.unsafe_buffer_pointer() for l in leaves(s)]  # noqa: E731
+    before = ptr(cap)
+    cap, _ = cap_step(cap, batches[check_steps])     # replayed program
+    donated = before == ptr(cap)
+    print(f"train_region_vs_per_op bitwise={bitwise} donated={donated}")
+
+    results = {}
+    for label in ("per_op", "region"):
+        clear_cache()
+        state = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+        if label == "region":
+            step, _ = make_region_train_step(
+                model, opt_cfg, mesh=None,
+                cfg=TrainConfig(mode="tapir", remat="auto"))
+        else:
+            step = per_op_step
+        state, m = step(state, batches[0])           # warm: capture/compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for i in range(iters):
+            state, m = step(state, batches[i + 1])
+        jax.block_until_ready(m["loss"])
+        t = (time.perf_counter() - t0) / iters
+        results[label] = {"ms_per_step": t * 1e3, "cache": cache_stats()}
+        print(f"train_region_vs_per_op {label:8s} {t*1e3:9.3f} ms/step")
+    speedup = (results["per_op"]["ms_per_step"]
+               / results["region"]["ms_per_step"])
+    print(f"train_region_vs_per_op speedup: {speedup:.2f}x")
+    out = {"per_op": results["per_op"], "region": results["region"],
+           "speedup": speedup, "bitwise_match": bitwise, "donated": donated,
+           "config": {"arch": "qwen2_5_3b-smoke", "B": 2, "S": 16,
+                      "check_steps": check_steps, "iters": iters,
+                      "compute_dtype": "float32"}}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {json_path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("case", nargs="?", default="all",
@@ -833,6 +944,7 @@ def main():
                              "serve_mesh_vs_single",
                              "serve_fault_vs_clean",
                              "program_cache_cold_vs_warm",
+                             "train_region_vs_per_op",
                              "kernel_vs_jnp"])
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--json", default=None)
@@ -865,6 +977,10 @@ def main():
     if args.case == "program_cache_cold_vs_warm":
         bench_program_cache_cold_vs_warm(
             json_path=args.json or "BENCH_cache.json")
+        return
+    if args.case == "train_region_vs_per_op":
+        bench_train_region_vs_per_op(
+            json_path=args.json or "BENCH_train.json")
         return
     if args.case == "kernel_vs_jnp":
         bench_kernel_vs_jnp(json_path=args.json or "BENCH_kernel.json")

@@ -25,7 +25,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           min_serve_speedup: float = 1.3,
           max_fault_overhead: float = 0.25,
           min_warm_ttft_speedup: float = 5.0,
-          min_prefix_speedup: float = 1.5) -> int:
+          min_prefix_speedup: float = 1.5,
+          min_train_speedup: float = 1.3) -> int:
     """Perf regression gate: run the two region benchmarks, the
     continuous-batching benchmark, the mesh-serving benchmark and the
     fault-recovery benchmark, and FAIL (non-zero exit) if
@@ -49,7 +50,11 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
     ``min_prefix_speedup`` tokens/sec vs the unshared engine on a
     system-prompt-heavy workload / prefills the shared prefix more than
     once / loses bitwise per-request equality / compiles any program
-    after warmup (page indirection must stay data, not shape)."""
+    after warmup (page indirection must stay data, not shape), or
+    train_region_vs_per_op's captured training step drops below
+    ``min_train_speedup`` over the per-op path / loses bitwise loss +
+    state equality across its checked steps / stops updating params and
+    optimizer moments in place (donated buffers)."""
     os.makedirs(out_dir, exist_ok=True)
     from benchmarks import kernel_bench
     rv = kernel_bench.bench_region_vs_per_op(
@@ -68,6 +73,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         json_path=os.path.join(out_dir, "BENCH_cache.json"))
     pv = kernel_bench.bench_serve_prefix_vs_baseline(
         json_path=os.path.join(out_dir, "BENCH_prefix.json"))
+    tv = kernel_bench.bench_train_region_vs_per_op(
+        json_path=os.path.join(out_dir, "BENCH_train.json"))
     failures = []
     if rv["speedup"] < min_region_speedup:
         failures.append(f"region_vs_per_op speedup {rv['speedup']:.2f}x "
@@ -142,6 +149,15 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
         failures.append(f"prefix-sharing engine compiled "
                         f"{pv['warm_compiled']} programs after warmup "
                         f"(page indirection leaked into program identity)")
+    if tv["speedup"] < min_train_speedup:
+        failures.append(f"train_region_vs_per_op speedup "
+                        f"{tv['speedup']:.2f}x < {min_train_speedup}x")
+    if not tv["bitwise_match"]:
+        failures.append("captured training step no longer bitwise-matches "
+                        "the per-op step (loss/params/opt state)")
+    if not tv["donated"]:
+        failures.append("captured training step stopped updating params/"
+                        "optimizer moments in place (donation lost)")
     if failures:
         print("CHECK FAILED:")
         for f in failures:
@@ -155,7 +171,8 @@ def check(out_dir: str, min_region_speedup: float = 1.5,
           f"impl choice measured-correct on both shapes, warm start "
           f"{cv['ttft_speedup']:.1f}x ttft with 0 compiles bitwise, "
           f"prefix sharing {pv['speedup']:.2f}x bitwise with prefix "
-          f"prefilled once")
+          f"prefilled once, captured train step {tv['speedup']:.2f}x "
+          f"bitwise + donated")
     return 0
 
 

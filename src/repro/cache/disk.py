@@ -72,7 +72,10 @@ FORMAT_VERSION = 2
 #: the pass pipeline / lowering emits for the same graph signature MUST
 #: bump this, or old entries would replay stale programs.  (The jax/jaxlib
 #: versions are keyed separately — this covers *our* compiler.)
-PIPELINE_VERSION = "repro-pipeline-8"
+#: 9: pyfunc nodes lower through a jit boundary (transpose-unit association
+#: for gradients) and the autodiff/gradient-program machinery landed —
+#: programs emitted by pipeline-8 for the same signature are stale.
+PIPELINE_VERSION = "repro-pipeline-9"
 
 
 def _versions() -> dict:

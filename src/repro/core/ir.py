@@ -108,6 +108,15 @@ class Schedule:
     # same pass for observability (``TaskGraph.dump_schedule`` /
     # ``tapir.explain``) — the argmin over the float entries is ``impl``.
     impl_costs: dict[str, Any] = field(default_factory=dict)
+    # Recompute-vs-store decision for a forward node whose value the
+    # backward needs: "store" (keep the activation live across the fwd/bwd
+    # boundary) or "recompute" (rematerialize it in the backward).  Bound
+    # by ``core.autodiff`` from the roofline arm in ``core.schedule.
+    # pick_remat`` (or forced by the TrainConfig.remat policy hint).  ""
+    # on nodes the backward never consumes.  Both choices are bitwise-
+    # identical — the field only changes which HLO the joint graph emits,
+    # so it participates in ``signature()``.
+    remat: str = ""
     notes: list[str] = field(default_factory=list)
 
 
@@ -441,6 +450,7 @@ class TaskGraph:
                 n.sharding,
                 tuple(sorted(pos[i] for i in n.anti)),
                 n.schedule.impl,
+                n.schedule.remat,
                 tuple((fn, tuple(pos[i] for i in extra), _freeze(a))
                       for fn, extra, a in n.epilogue),
             ))

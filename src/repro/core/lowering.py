@@ -34,6 +34,28 @@ import numpy as np
 
 from .ir import Node, TaskGraph
 
+# -- pyfunc jit units ---------------------------------------------------------
+
+#: (fn, static) -> jitted callable.  A pyfunc node lowers through a jit
+#: BOUNDARY, not an inline call: jax transposes a pjit as a unit, finishing
+#: the fn's internal cotangent accumulation before the caller adds sibling
+#: contributions — the same association the eager path's module-level
+#: ``jax.jit(fn)`` wrappers produce.  Inlining the fn instead would let a
+#: whole-region ``jax.grad`` interleave those adds and drift in the last
+#: ulp from both the eager path and the per-node VJP of ``core.autodiff``.
+#: (XLA inlines the call again, so forward bits are unchanged.)
+_PYFUNC_JITS: dict = {}
+
+
+def _pyfunc_jit(fn: Callable, static) -> Callable:
+    key = (fn, tuple(static))
+    jfn = _PYFUNC_JITS.get(key)
+    if jfn is None:
+        jfn = jax.jit(partial(fn, **dict(static)))
+        _PYFUNC_JITS[key] = jfn
+    return jfn
+
+
 # -- elementwise registry ----------------------------------------------------
 
 _EW: dict[str, Callable] = {
@@ -48,6 +70,13 @@ _EW: dict[str, Callable] = {
 
 def _apply_epilogue(y, node: Node, env: dict) -> Any:
     for fn, extras, at in node.epilogue:
+        # Replay the un-fused chain bitwise: the head materialized in the
+        # consumer's dtype before the ew op ran, so a bf16 residual add
+        # happens in bf16 — not on the f32 accumulator.  Fusion must not
+        # change WHAT is computed, only when the output round-trips HBM.
+        edt = at.get("dtype")
+        if edt is not None:
+            y = y.astype(edt)
         vals = [env[e] for e in extras]
         vals = [v.astype(y.dtype) if hasattr(v, "astype") else v for v in vals]
         f = _EW[fn]
@@ -264,7 +293,8 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
         return jax.lax.iota(node.ttype.dtype, node.ttype.shape[0])
     if op == "pyfunc":
         vals = [env[i] for i in node.inputs]
-        res = node.attrs["fn"](*vals, **dict(node.attrs.get("static", ())))
+        res = _pyfunc_jit(node.attrs["fn"],
+                          node.attrs.get("static", ()))(*vals)
         out_i = node.attrs.get("out")
         return res if out_i is None else res[out_i]
     if op == "index":
@@ -306,6 +336,42 @@ def _lower_node(node: Node, env: dict, inputs: dict, backend: str,
     if op == "conv2d":
         return _lower_conv2d(node, env, backend)
     raise NotImplementedError(op)
+
+
+def node_callable(node: Node, backend: str = "cpu",
+                  bf16_partials: bool = False) -> Callable:
+    """A pure callable computing ``node``'s value from positional operands.
+
+    Operand order is ``node.inputs`` followed by every epilogue extra in
+    epilogue order (duplicates kept); the returned callable carries that
+    nid order as ``.operands``.  ``core.autodiff`` differentiates this —
+    the primal half of the generic VJP rule — so it must lower the node
+    EXACTLY as ``emit`` would: same impl, same tile, same epilogue chain.
+    The node is replicated with dense operand ids so lowering never reads
+    the originating graph."""
+    k = len(node.inputs)
+    repl = Node(nid=0, op=node.op, inputs=tuple(range(k)),
+                ttype=node.ttype, attrs=dict(node.attrs),
+                pdims=node.pdims, rdims=node.rdims)
+    repl.schedule.impl = node.schedule.impl
+    repl.schedule.tile = dict(node.schedule.tile)
+    pos = k
+    new_epi = []
+    for fn, extras, at in node.epilogue:
+        ids = tuple(range(pos, pos + len(extras)))
+        pos += len(extras)
+        new_epi.append((fn, ids, dict(at)))
+    repl.epilogue = new_epi
+    arity = pos
+
+    def call(*vals):
+        assert len(vals) == arity, (node.op, arity, len(vals))
+        env = dict(enumerate(vals))
+        return _lower_node(repl, env, {}, backend, bf16_partials)
+
+    call.operands = tuple(node.inputs) + tuple(
+        e for _, extras, _ in node.epilogue for e in extras)
+    return call
 
 
 def _multi_device_mesh():

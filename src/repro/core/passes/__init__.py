@@ -73,15 +73,15 @@ def mesh_fingerprint() -> tuple:
     return fp
 
 
-def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
-                 ablate_serialization: bool = False,
-                 force_impl: tuple | None = None) -> TaskGraph:
-    if mode == "opaque":
-        seal_libraries(g)
-        assign_early_heuristics(g, cm)
-        g.prune()
-        return g
-    assert mode == "tapir", mode
+def optimize_graph(g: TaskGraph, cm: CostModel) -> TaskGraph:
+    """The optimization half of the tapir pipeline (expose + CSE + fusion),
+    without pruning or scheduling.  ``core.autodiff`` runs this over a
+    training capture BEFORE deriving the backward, so the VJP rules
+    differentiate exactly the fused forms the per-op path executes (the
+    same per-call fusions, e.g. the QKV wide GEMM) — and ``run_pipeline``
+    re-runs it over the joint fwd+bwd graph, where it is idempotent on the
+    already-fused forward and additionally fuses across the fwd/bwd
+    boundary."""
     expose_libraries(g)
     cse(g)
     fuse_added_gemms(g)
@@ -95,6 +95,19 @@ def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
     fuse_shared_input(g, stacked=cm.name.startswith("tpu")
                       or mesh_has_model_axis())
     fuse_epilogues(g)
+    return g
+
+
+def run_pipeline(g: TaskGraph, mode: str, cm: CostModel, backend: str,
+                 ablate_serialization: bool = False,
+                 force_impl: tuple | None = None) -> TaskGraph:
+    if mode == "opaque":
+        seal_libraries(g)
+        assign_early_heuristics(g, cm)
+        g.prune()
+        return g
+    assert mode == "tapir", mode
+    optimize_graph(g, cm)
     g.prune()
     # replace() keeps every other constant (grain_bytes, spawn_s, score
     # passes, ...) — a field-by-field rebuild silently reset the ones it

@@ -73,6 +73,16 @@ class CostModel:
     # no scratchpad, so the fused form still walks the score matrix
     # through the cache hierarchy like the materialized one does.
     score_passes_fused: float = 1.0
+    # --- remat arm (training fwd/bwd boundary) ------------------------
+    # Storing an activation across the forward/backward boundary costs one
+    # HBM write at the end of the forward plus one read in the backward;
+    # rematerializing it costs the node's own FLOPs plus re-reading its
+    # inputs.  ``remat_store_roundtrips`` is the round-trip count charged
+    # to the store side (2.0 = write + read); ``remat_bias`` scales the
+    # recompute side (>1 biases toward storing — recompute serializes the
+    # backward, which a pure roofline undercounts).
+    remat_store_roundtrips: float = 2.0
+    remat_bias: float = 1.0
 
 
 CPU_COST_MODEL = CostModel(name="cpu_host", peak_flops=5e10, hbm_bw=2e10,
@@ -442,6 +452,41 @@ def pick_impl(g: TaskGraph, node: Node, cm: CostModel, backend: str,
     node.schedule.notes.append(
         f"impl: {best.name} ({_fmt_s(best.cost_s)} roofline, argmin of "
         f"{n_avail}/{len(cands)} candidates)")
+
+
+def pick_remat(g: TaskGraph, node: Node, cm: CostModel,
+               policy: str = "auto") -> str:
+    """Recompute-vs-store for a forward node whose output the backward
+    consumes — the remat arm of the cost model.
+
+    ``policy`` is the TrainConfig.remat hint:
+      * "auto"  — roofline decision: store costs ``remat_store_roundtrips``
+        HBM trips over the node's output bytes; recompute costs the node's
+        FLOPs at peak plus re-streaming its input bytes.  Elementwise
+        composites (norms, RoPE, residual adds) recompute nearly for free,
+        GEMM/attention outputs are cheaper to store.
+      * "none"  — store everything (no remat);
+      * "full"  — recompute everything;
+      * "dots"  — store library-op (GEMM-shaped) outputs only, the
+        ``checkpoint_dots`` analogue.
+    Either choice is bitwise-identical (recompute replays the exact same
+    ops); the decision moves HBM bytes, never numerics."""
+    if policy == "none":
+        return "store"
+    if policy == "full":
+        return "recompute"
+    if policy == "dots":
+        return "store" if node.op in LIBRARY_OPS else "recompute"
+    store_s = cm.remat_store_roundtrips * node.ttype.bytesize / cm.hbm_bw
+    in_bytes = sum(g.nodes[i].ttype.bytesize for i in node.inputs
+                   if i in g.nodes)
+    recompute_s = cm.remat_bias * (node.flops() / cm.peak_flops
+                                   + in_bytes / cm.hbm_bw)
+    choice = "recompute" if recompute_s < store_s else "store"
+    node.schedule.notes.append(
+        f"remat: {choice} (store {store_s*1e6:.1f}us vs recompute "
+        f"{recompute_s*1e6:.1f}us)")
+    return choice
 
 
 # ---------------------------------------------------------------------------

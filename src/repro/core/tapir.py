@@ -215,10 +215,26 @@ def _positional_jit(emitted: Callable, g: TaskGraph):
     ``donate_argnums`` can name exactly the cache inputs the graph's
     update-slice nodes donate — XLA then aliases input and output storage
     (no per-step cache copy)."""
-    names = [n for n, _ in g.inputs]
     donated = g.donated_inputs()
-    don_names = {n for n, nid in g.inputs if nid in donated}
-    pos = tuple(i for i, n in enumerate(names) if n in don_names)
+    # jax assigns donated buffers to outputs greedily by aval, walking
+    # outputs in order and consuming the first unmatched donated arg of
+    # equal shape/dtype.  Region inputs are in first-USE order (forward
+    # usage), outputs in return-tree order, and a training state has many
+    # same-shaped leaves (a param and its two AdamW moments), so the raw
+    # order would alias leaf A's buffer to leaf B's output — aliased, but
+    # not IN PLACE.  Putting donated args last, sorted by the position of
+    # the output that donates them, makes the greedy match exact:
+    # each in-place update lands in its own buffer.
+    out_pos = {}
+    for i, onid in enumerate(g.outputs):
+        d = g.nodes[onid].donates
+        if d is not None and d not in out_pos:
+            out_pos[d] = i
+    don_sorted = sorted(donated, key=lambda d: out_pos.get(d, len(g.outputs)))
+    nid2name = {nid: n for n, nid in g.inputs}
+    don_names = [nid2name[d] for d in don_sorted]
+    names = [n for n, _ in g.inputs if n not in set(don_names)] + don_names
+    pos = tuple(range(len(names) - len(don_names), len(names)))
 
     def _positional(*argv):
         return emitted(dict(zip(names, argv)))
@@ -724,6 +740,13 @@ def _resolve_reshape(cur: tuple, shape: tuple) -> tuple[int, ...]:
 
 def is_traced(x) -> bool:
     return isinstance(x, TracedTensor)
+
+
+def in_region() -> bool:
+    """True while a region capture is open on this thread — model code
+    uses it to pick capture-stable paths (memoized rope tables, lifted
+    composites) whose VALUES are bitwise-identical to the eager path."""
+    return _active_region() is not None
 
 
 def annotate_sharding(x, spec):
@@ -1664,15 +1687,31 @@ def conv2d(x, kern, b=None, strides=(1, 1), padding="SAME",
 def scan_layers(body: Callable, stacked_params, x, unroll_hint: Optional[int] = None):
     """Run ``x = body(params_i, x)`` over a stacked layer pytree.
 
-    tapir mode: ``lax.scan`` (one lowering of the block; XLA pipelines it)
-    with the config's remat policy — the late scheduling decision.
-    opaque mode: python-unrolled (stock XLA's historical behaviour), capped
-    to keep compile times sane."""
+    Scan-vs-unroll is a cost-model decision (``unroll_max_trip``), not a
+    mode one: shallow stacks unroll in EVERY mode, deep stacks ``lax.scan``
+    (one lowering of the block; XLA pipelines it).  Keeping the iteration
+    structure identical across modes matters for bits — XLA compiles a
+    scan body in its own fusion context, so a scanned stack and the same
+    stack unrolled differ in the last ulp under bf16, and the per-op path
+    would silently stop being bitwise-comparable to a region capture
+    (which always unrolls into the task graph).  The config's remat
+    policy wraps the body either way — ``jax.checkpoint`` makes each
+    layer's backward a transpose unit, the association the captured
+    step's per-node VJP reproduces."""
     cfg = get_config()
     L = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
 
-    if cfg.mode == "opaque" and L <= max(cfg.resolved_cost_model().unroll_max_trip,
-                                         unroll_hint or 0):
+    leaves = jax.tree_util.tree_leaves(stacked_params)
+    if _active_region() is not None and (
+            isinstance(x, TracedTensor)
+            or any(isinstance(l, TracedTensor) for l in leaves)):
+        # region capture: unroll into the task graph.  ``lax.scan`` on a
+        # TracedTensor would coerce via ``__jax_array__`` and flush the
+        # region (splitting the capture); the unrolled python loop keeps
+        # every layer in ONE graph, so CSE/fusion see across layers —
+        # and, for a captured training step, across the fwd/bwd boundary.
+        # ``a[i]`` on a traced leaf is an "index" node; semantics match
+        # the scan exactly (same body, same order, fixed trip count).
         for i in range(L):
             p_i = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
             x = body(p_i, x)
@@ -1684,6 +1723,12 @@ def scan_layers(body: Callable, stacked_params, x, unroll_hint: Optional[int] = 
     elif cfg.remat == "dots":
         fn = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    if L <= max(cfg.resolved_cost_model().unroll_max_trip, unroll_hint or 0):
+        for i in range(L):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
+            x = fn(p_i, x)
+        return x
 
     def step(carry, p_i):
         return fn(p_i, carry), None
@@ -1713,6 +1758,24 @@ def explain(g: Optional[TaskGraph] = None) -> str:
     if not _GRAPHS and not _PROVENANCE:
         return "(no compiled graphs yet — run something under tapir first)"
     parts = [gr.dump_schedule() for gr in _GRAPHS.values()]
+    grad_graphs = [gr for gr in _GRAPHS.values()
+                   if getattr(gr, "grad_meta", None)]
+    if grad_graphs:
+        lines = ["== gradient programs =="]
+        for gr in grad_graphs:
+            m = gr.grad_meta
+            lines.append(
+                f"  {gr.name}: {m['n_fwd']} fwd nodes, {m['n_bwd']} bwd "
+                f"nodes; remat {m['remat']['store']} stored / "
+                f"{m['remat']['recompute']} recomputed "
+                f"({m['bytes_stored']} B stored vs "
+                f"{m['bytes_recomputed']} B recomputed)")
+            for nid in sorted(gr.nodes):
+                node = gr.nodes[nid]
+                if node.schedule.remat:
+                    lines.append(f"    %{nid} {node.op}: "
+                                 f"{node.schedule.remat}")
+        parts.append("\n".join(lines))
     if _PROVENANCE:
         lines = ["== program cache provenance =="]
         for info in _PROVENANCE.values():

@@ -21,9 +21,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .ref import _EW
 
-# epilogue spec entry: (fn_name, operand_kind, head_pos)
+# epilogue spec entry: (fn_name, operand_kind, head_pos, dtype)
 #   operand_kind: "none" (unary), "row" (operand shape [n]),
 #                 "full" (operand shape [m, n])
+#   dtype: compute dtype of the un-fused consumer op (None = accumulator);
+#          the tile is cast before the stage so fusing is bitwise-invisible
 
 
 def _gemm_kernel(*refs, nk: int, epi_spec, out_dtype):
@@ -44,12 +46,14 @@ def _gemm_kernel(*refs, nk: int, epi_spec, out_dtype):
     def _finish():
         y = acc_ref[...]
         oi = 0
-        for fn, kind, head_pos in epi_spec:
+        for fn, kind, head_pos, edt in epi_spec:
+            if edt is not None:
+                y = y.astype(edt)
             f = _EW[fn]
             if kind == "none":
                 y = f(y)
             else:
-                v = epi_refs[oi][...].astype(jnp.float32)
+                v = epi_refs[oi][...].astype(y.dtype)
                 oi += 1
                 if kind == "row":          # [1, bn] broadcast over rows
                     v = v.reshape(1, -1)
@@ -61,7 +65,7 @@ def fused_matmul_kernel(x, w, epi_operands, epi_spec, *, bm, bn, bk,
                         out_dtype, interpret=False):
     """x: [m, k] (pre-padded to tile multiples), w: [k, n],
     epi_operands: arrays ([n] rows or [m, n] full) in epi_spec order,
-    epi_spec: static tuple of (fn, kind, head_pos)."""
+    epi_spec: static tuple of (fn, kind, head_pos, dtype)."""
     m, k = x.shape
     _, n = w.shape
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
@@ -71,7 +75,7 @@ def fused_matmul_kernel(x, w, epi_operands, epi_spec, *, bm, bn, bk,
         pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
         pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
     ]
-    for (fn, kind, hp) in epi_spec:
+    for (fn, kind, hp, edt) in epi_spec:
         if kind == "row":   # operands arrive as [1, n]
             in_specs.append(pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)))
         elif kind == "full":

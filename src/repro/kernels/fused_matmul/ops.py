@@ -25,16 +25,17 @@ def _classify(epilogue, out_shape):
     m, n = out_shape
     for fn, vals, at in epilogue or []:
         hp = at.get("head_pos", 0)
+        edt = at.get("dtype")
         if not vals:
-            spec.append((fn, "none", hp))
+            spec.append((fn, "none", hp, edt))
             continue
         (v,) = vals  # one operand per epilogue stage
         if v.ndim <= 1 or (v.ndim == 2 and v.shape[0] == 1):
-            spec.append((fn, "row", hp))
+            spec.append((fn, "row", hp, edt))
             operands.append(
                 jnp.broadcast_to(jnp.asarray(v).reshape(1, -1), (1, n)))
         else:
-            spec.append((fn, "full", hp))
+            spec.append((fn, "full", hp, edt))
             operands.append(jnp.broadcast_to(v.reshape(-1, v.shape[-1]), (m, n)))
     return tuple(spec), operands
 

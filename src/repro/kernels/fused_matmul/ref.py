@@ -14,8 +14,14 @@ _EW = {
 
 
 def apply_epilogue(y, epilogue):
-    """epilogue: list of (fn_name, [operand arrays], attrs)."""
+    """epilogue: list of (fn_name, [operand arrays], attrs).
+
+    An attrs ``dtype`` casts the running value first — the dtype the
+    un-fused consumer op computed in — so fusing is bitwise-invisible."""
     for fn, vals, at in epilogue or []:
+        edt = at.get("dtype")
+        if edt is not None:
+            y = y.astype(edt)
         vals = [v.astype(y.dtype) for v in vals]
         f = _EW[fn]
         if at.get("head_pos", 0) == 0:

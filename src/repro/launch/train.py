@@ -25,7 +25,8 @@ from repro.data import DataConfig, TokenPipeline
 from repro.dist.fault import FaultTolerantLoop
 from repro.models.base import get_model
 from repro.optim import AdamWConfig
-from repro.train import TrainConfig, init_state, make_train_step
+from repro.train import (TrainConfig, init_state, make_region_train_step,
+                         make_train_step)
 
 log = logging.getLogger("repro.train")
 
@@ -56,8 +57,14 @@ def main(argv=None):
     ap.add_argument("--mode", default="tapir", choices=["tapir", "opaque"])
     ap.add_argument("--target", default="cpu", choices=["cpu", "tpu"])
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--remat", default="none",
-                    choices=["none", "dots", "full"])
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "dots", "full", "auto"],
+                    help="default: none on the per-op path, auto "
+                         "(roofline) with --capture-step")
+    ap.add_argument("--capture-step", action="store_true",
+                    help="run the region-captured training step (joint "
+                         "fwd+bwd task graph, donated state) instead of "
+                         "the per-op jax.grad path")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
@@ -74,10 +81,19 @@ def main(argv=None):
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
                           warmup_steps=max(args.steps // 10, 1))
     mesh = make_mesh_for_devices()
-    tcfg = TrainConfig(mode=args.mode, strategy="tp", remat=args.remat,
+    remat = args.remat or ("auto" if args.capture_step else "none")
+    tcfg = TrainConfig(mode=args.mode, strategy="tp", remat=remat,
                        microbatches=args.microbatches, target=args.target)
 
-    if mesh is not None:
+    if args.capture_step:
+        # region-captured step: ONE joint fwd+bwd program, compiled on the
+        # first call and replayed from the program cache after; remat is a
+        # roofline schedule decision ("auto") unless the flag forces it,
+        # and params + optimizer state are donated through the program.
+        step_fn, shardings = make_region_train_step(model, opt_cfg,
+                                                    mesh=mesh, cfg=tcfg)
+        state = init_state(model, opt_cfg, jax.random.PRNGKey(0), mesh)
+    elif mesh is not None:
         step_fn, shardings, _ = make_train_step(model, opt_cfg, mesh, tcfg)
         state = init_state(model, opt_cfg, jax.random.PRNGKey(0), mesh)
     else:

@@ -22,6 +22,22 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _ce_loss(logits, labels, mask):
+    """Masked mean CE — module-level so its identity is stable in region
+    graph signatures (it lowers as one ``pyfunc`` node under capture)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _ce_loss_unmasked(logits, labels):
+    # the all-ones mask is built INSIDE the lifted fn (under the jit), so
+    # a region capture needs no concrete mask input — bitwise-identical
+    # to the masked form with ones
+    return _ce_loss(logits, labels, jnp.ones(labels.shape, jnp.float32))
+
+
 @dataclass(frozen=True)
 class ModelConfig:
     name: str
@@ -155,14 +171,23 @@ class BaseModel:
         raise NotImplementedError
 
     def loss(self, params, batch: dict) -> jax.Array:
+        from repro.core import tapir
         logits = self.forward(params, batch)
         labels = batch["labels"]
-        logits = logits.astype(jnp.float32)
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, labels[..., None],
-                                   axis=-1)[..., 0]
-        mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
-        return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        mask = batch.get("mask")
+        # dispatched through ``lift`` so a region capture keeps the CE in
+        # the same graph (one pyfunc node) instead of flushing; outside a
+        # region ``lift`` is a direct call — identical trace either way
+        if mask is None:
+            return tapir.lift(_ce_loss_unmasked, logits, labels)
+        return tapir.lift(_ce_loss, logits, labels, mask)
+
+    def capture_aux(self, batch: dict) -> tuple:
+        """Concrete auxiliary leaves the forward binds under region capture
+        (identity-stable memoized tables).  The captured training step
+        passes them as argument leaves so program replay can rebind every
+        region input; families with none return ()."""
+        return ()
 
     # -- serving ----------------------------------------------------------
     def supports_slots(self) -> bool:

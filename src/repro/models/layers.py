@@ -121,6 +121,27 @@ def full_rope_table(max_len: int, head_dim: int, base: float = 10000.0,
     return tab
 
 
+def arange_rope_table(seq_len: int, head_dim: int, base: float = 10000.0,
+                      fraction: float = 1.0):
+    """cos/sin for positions ``arange(seq_len)`` exactly (no bucketing),
+    memoized so the array *identities* are stable across calls.
+
+    The training-step capture takes the tables as region inputs; the
+    replay cache requires every region input to arrive as a stable
+    argument leaf — a table recomputed per call would force a re-trace
+    every step.  Values are bitwise-identical to ``rope_table(arange(S))``
+    (it IS that call, computed once)."""
+    key = (int(seq_len), int(head_dim), float(base), float(fraction))
+    tab = _ARANGE_ROPE.get(key)
+    if tab is None:
+        tab = rope_table(jnp.arange(seq_len), head_dim, base, fraction)
+        _ARANGE_ROPE[key] = tab
+    return tab
+
+
+_ARANGE_ROPE: dict = {}
+
+
 def apply_rope(x, cos, sin, fraction: float = 1.0):
     """x: [B,S,H,D].  chatglm-style '2d/half' rope passes fraction=0.5:
     only the first half of head dims rotates, the rest pass through."""

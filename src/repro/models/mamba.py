@@ -213,6 +213,30 @@ class Zamba2(BaseModel):
         logits = tapir.linear(h, w.astype(h.dtype))
         return shard_act(logits, "batch", None, "vocab")
 
+    # -- slot-paged serving layout (ROADMAP item 2 groundwork) -------------
+    def slot_param_axes(self) -> dict:
+        """Logical axes for the slot-serving param layout: one ``mamba``
+        entry per SSD layer, with the shared attention+MLP block appearing
+        as a ``shared_attn`` entry after each group (same single weight
+        set each time — stable array ids, like the stacked-slice hoisting
+        in the dense path).  Contraction-dim weights (``w_out``, and the
+        shared block's ``wo``/``wd``) keep a non-model last axis and stay
+        REPLICATED per the bitwise-serving carried constraint."""
+        cfg = self.cfg
+        mamba = {k: tuple(s.axes[1:])
+                 for k, s in _mamba_block_specs(cfg, cfg.n_layers).items()}
+        shared = {k: tuple(s.axes[1:])
+                  for k, s in _block_specs(cfg, 1).items()}
+        per, G = cfg.shared_attn_every, self.n_groups
+        layers = []
+        for i in range(cfg.n_layers):
+            layers.append(("mamba", dict(mamba)))
+            if G and (i + 1) % per == 0 and (i + 1) // per <= G:
+                layers.append(("shared_attn", dict(shared)))
+        return {"layers": layers,
+                "head": {"ln_f": ("embed",), "w": ("embed", "vocab")},
+                "embed": ("vocab", "embed")}
+
     # -- serving ----------------------------------------------------------
     def init_cache(self, batch: int, max_len: int) -> dict:
         cfg = self.cfg

@@ -163,6 +163,23 @@ class RWKV6(BaseModel):
         logits = tapir.linear(h, params["lm_head"].astype(h.dtype))
         return shard_act(logits, "batch", None, "vocab")
 
+    # -- slot-paged serving layout (ROADMAP item 2 groundwork) -------------
+    def slot_param_axes(self) -> dict:
+        """Logical axes for the slot-serving param layout (per-layer dicts
+        with the stacked "layers" axis dropped, mirroring the dense/moe
+        convention) so ``pin_slot_params`` can pin RWKV bodies once the
+        slot decode path lands.  Contraction-dim weights (``wo``, ``wcv``)
+        keep a non-model last axis and stay REPLICATED — sharding a K-dim
+        operand would change the local reduction extent and break bitwise
+        serving (carried constraint)."""
+        blocks = {k: tuple(s.axes[1:])
+                  for k, s in _rwkv_block_specs(self.cfg,
+                                                self.cfg.n_layers).items()}
+        return {"layers": [("rwkv", dict(blocks))
+                           for _ in range(self.cfg.n_layers)],
+                "head": {"ln_f": ("embed",), "w": ("embed", "vocab")},
+                "embed": ("vocab", "embed")}
+
     # -- serving (stateful — no KV cache, O(1) per token) ------------------
     def init_cache(self, batch: int, max_len: int) -> dict:
         cfg = self.cfg

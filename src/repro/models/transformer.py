@@ -14,6 +14,14 @@ from . import layers as L
 from .base import BaseModel, ModelConfig, ParamSpec, register_family
 
 
+def _embed_lookup(embed, tokens, cdt):
+    return jnp.take(embed, tokens, axis=0).astype(cdt)
+
+
+def _transpose_2d(w):
+    return w.T
+
+
 def _block_specs(cfg: ModelConfig, n_layers: int) -> dict:
     d, hd = cfg.d_model, cfg.hd
     H, Hkv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
@@ -140,20 +148,34 @@ class DenseLM(BaseModel):
 
     # ------------------------------------------------------------------
     def _embed(self, params, tokens):
-        cdt = jnp.dtype(self.cfg.compute_dtype)
-        return jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        # lift keeps the lookup inside a region capture (a ``jnp.take`` on
+        # a traced table would coerce and flush); outside a region it is a
+        # direct call — same trace as the old inline form
+        cdt = str(jnp.dtype(self.cfg.compute_dtype))
+        return tapir.lift(_embed_lookup, params["embed"], tokens, cdt=cdt)
 
     def _head(self, params, x):
         x = self._norm(x, params["ln_f"])
         w = params.get("lm_head")
         if w is None:
-            w = params["embed"].T
+            w = params["embed"]
+            w = (tapir.lift(_transpose_2d, w) if tapir.is_traced(w)
+                 else w.T)
         logits = tapir.linear(x, w.astype(x.dtype))
         return shard_act(logits, "batch", None, "vocab")
 
     def backbone(self, params, h, positions):
-        cos, sin = L.rope_table(positions, self.cfg.hd,
-                                fraction=0.5 if self.cfg.rope == "half" else 1.0)
+        frac = 0.5 if self.cfg.rope == "half" else 1.0
+        if tapir.in_region():
+            # identity-stable memoized tables: the training-step capture
+            # binds them as region inputs, and program replay requires the
+            # SAME leaves every call (values bitwise-equal to
+            # ``rope_table(arange(S))`` — backbone only ever sees arange
+            # positions, see ``forward``)
+            cos, sin = L.arange_rope_table(int(positions.shape[0]),
+                                           self.cfg.hd, fraction=frac)
+        else:
+            cos, sin = L.rope_table(positions, self.cfg.hd, fraction=frac)
         cdt = h.dtype
 
         def body(p, x):
@@ -161,6 +183,12 @@ class DenseLM(BaseModel):
             return self._block(p, x, cos, sin)
 
         return tapir.scan_layers(body, params["blocks"], h)
+
+    def capture_aux(self, batch: dict) -> tuple:
+        # the same memoized objects ``backbone`` fetches under capture
+        return L.arange_rope_table(
+            int(batch["tokens"].shape[1]), self.cfg.hd,
+            fraction=0.5 if self.cfg.rope == "half" else 1.0)
 
     def forward(self, params, batch: dict):
         tokens = batch["tokens"]

@@ -3,6 +3,12 @@
 Optimizer state lives in the same sharding tree as the parameters (the
 launcher FSDP-shards it over the ``data`` axis), so memory per device is
 O(params / (tp * dp)) in the fsdp_tp strategy.
+
+The numeric kernels (``global_norm_leaves``, ``clip_scale``,
+``leaf_update``) are module-level on purpose: the per-op reference step
+composes them under ``jax.jit`` while the region-captured training step
+lifts the SAME functions as graph nodes — bitwise equality between the
+two paths is by construction, not by test luck.
 """
 from __future__ import annotations
 
@@ -38,15 +44,31 @@ def cosine_schedule(cfg: AdamWConfig, step):
     return cfg.lr * warm * frac
 
 
-def global_norm(tree) -> jax.Array:
-    leaves = jax.tree_util.tree_leaves(tree)
+def global_norm_leaves(*leaves) -> jax.Array:
+    """Global norm over explicit leaves (``tree_leaves`` order).  The
+    accumulation order is THE canonical one — ``global_norm`` defers here,
+    and the captured step lifts this exact function."""
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                         for g in leaves))
 
 
+def global_norm(tree) -> jax.Array:
+    return global_norm_leaves(*jax.tree_util.tree_leaves(tree))
+
+
+def clip_scale(gnorm, max_norm: float):
+    """Clip factor ``min(1, max_norm/gnorm)``, guarded: an all-zero (or
+    denormal) gradient tree must yield scale 1.0, not the inf/NaN the
+    unguarded ``max_norm / gnorm`` division produces (``0/0`` when
+    ``max_norm`` is 0, overflow past f32 range otherwise)."""
+    tiny = jnp.finfo(jnp.float32).tiny
+    safe = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, tiny))
+    return jnp.where(gnorm > tiny, safe, jnp.float32(1.0))
+
+
 def clip_by_global_norm(tree, max_norm: float):
     g = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    scale = clip_scale(g, max_norm)
     return jax.tree_util.tree_map(lambda t: t * scale.astype(t.dtype), tree), g
 
 
@@ -60,28 +82,47 @@ def adamw_init(params, cfg: AdamWConfig):
     }
 
 
+def step_factors(step, cfg: AdamWConfig):
+    """(lr, bias-correction-1, bias-correction-2) for this step."""
+    step_f = step.astype(jnp.float32)
+    lr = cosine_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step_f
+    bc2 = 1 - cfg.b2 ** step_f
+    return lr, bc1, bc2
+
+
+def leaf_update(p, g, mu, nu, scale, lr, bc1, bc2, b1, b2, eps,
+                weight_decay, decay):
+    """One AdamW leaf: returns ``(p2, mu2, nu2)``.
+
+    ``scale`` is the global-norm clip factor (applied to ``g`` first,
+    exactly as ``clip_by_global_norm`` does tree-wide); ``decay`` is the
+    static matrix-vs-vector weight-decay switch (``p.ndim >= 2``)."""
+    g = g * scale.astype(g.dtype)
+    gf = g.astype(jnp.float32)
+    mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+    nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+    mhat = mu2 / bc1
+    nhat = nu2 / bc2
+    delta = mhat / (jnp.sqrt(nhat) + eps)
+    # decoupled weight decay on matrix params only
+    if decay:
+        delta = delta + weight_decay * p.astype(jnp.float32)
+    p2 = p.astype(jnp.float32) - lr * delta
+    return (p2.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype))
+
+
 def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
     """Returns (new_params, new_opt_state, metrics)."""
     step = opt_state["step"] + 1
-    lr = cosine_schedule(cfg, step)
-    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
-
-    b1, b2 = cfg.b1, cfg.b2
-    bc1 = 1 - b1 ** step.astype(jnp.float32)
-    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr, bc1, bc2 = step_factors(step, cfg)
+    gnorm = global_norm(grads)
+    scale = clip_scale(gnorm, cfg.grad_clip)
 
     def upd(p, g, mu, nu):
-        gf = g.astype(jnp.float32)
-        mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
-        nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
-        mhat = mu2 / bc1
-        nhat = nu2 / bc2
-        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
-        # decoupled weight decay on matrix params only (ndim >= 2)
-        if p.ndim >= 2:
-            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        p2 = p.astype(jnp.float32) - lr * delta
-        return (p2.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype))
+        return leaf_update(p, g, mu, nu, scale, lr, bc1, bc2,
+                           cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay,
+                           decay=p.ndim >= 2)
 
     out = jax.tree_util.tree_map(upd, params, grads,
                                  opt_state["mu"], opt_state["nu"])

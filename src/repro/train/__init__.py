@@ -1,5 +1,7 @@
+from .region_step import init_ef_state, make_region_train_step
 from .step import (TrainConfig, make_train_step, make_state_specs,
                    init_state, state_shardings)
 
 __all__ = ["TrainConfig", "make_train_step", "make_state_specs",
-           "init_state", "state_shardings"]
+           "init_state", "state_shardings", "make_region_train_step",
+           "init_ef_state"]

@@ -1,0 +1,229 @@
+"""Region-captured training step: the whole (loss -> grads -> AdamW)
+update as ONE task graph, compiled once and replayed from the program
+cache every step.
+
+Versus the per-op reference (``train/step.py``), the differences are
+*where* the computation is seen, never *what* is computed:
+
+* the forward traces through ``tapir.region`` (layers unrolled by the
+  capture-aware ``scan_layers``), the backward is derived per-node by
+  ``core.autodiff`` over the optimized forward, and the pass pipeline
+  then runs over the JOINT fwd+bwd graph — CSE and fusion work across
+  the fwd/bwd boundary.
+* recompute-vs-store is the roofline remat arm of the cost model
+  (``TrainConfig.remat`` is a policy hint: "auto" = roofline), not a
+  ``jax.checkpoint`` wrapper baked into the layer scan.
+* params and optimizer state are DONATED through the region program —
+  the AdamW leaf updates are in-place pyfunc nodes whose buffers alias
+  the inputs (verified by buffer-pointer identity), the same machinery
+  KV pages use in serving.
+* microbatch accumulation stays inside the captured step, unrolled at
+  capture with the reference ``lax.scan`` accumulation order (zero-init
+  f32, ascending microbatch adds, divide at the end) so the loss is
+  bitwise-equal to the per-op path.
+* on meshes, ``Node.sharding`` recorded by the forward's ``shard_act``
+  calls flows onto the backward's cotangent nodes; optional int8+EF
+  pod-axis gradient compression (``optim/compress.py``) folds in as two
+  pyfunc nodes per leaf with the error-feedback residual donated.
+
+The step executes EAGERLY at top level (not nested under an outer jit):
+nested-jit donation is ignored by XLA, and eager execution is exactly
+what lets the region replay cache + L2 program cache carry the cost.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autodiff, tapir
+from repro.core.ir import TensorType
+from repro.core.tapir import use
+from repro.optim import AdamWConfig
+from repro.optim.adamw import clip_scale, global_norm_leaves, leaf_update, \
+    step_factors
+from repro.optim.compress import compress_int8, decompress_int8
+
+from .step import TrainConfig, state_shardings
+
+
+def _bump_step(s):
+    return s + 1
+
+
+def _ef_quantize(g, r):
+    """int8 quantize-dequantize with error feedback: the captured-step
+    form of ``optim.compress.compressed_allreduce``'s per-shard math (the
+    cross-pod reduction itself stays with GSPMD — what the program sends
+    over the pod axis is the dequantized payload)."""
+    gf = g.astype(jnp.float32) + r
+    q, scale = compress_int8(gf)
+    deq = decompress_int8(q, scale, gf.shape)
+    return deq.astype(g.dtype), gf - deq
+
+
+def _acc_mean_losses(*ls, m):
+    acc = 0.0                       # matches the reference scan carry init
+    for l in ls:
+        acc = acc + l
+    return acc / m
+
+
+def _acc_mean_grads(*gs, m):
+    acc = jnp.zeros(gs[0].shape, jnp.float32)
+    for g in gs:
+        acc = acc + g.astype(jnp.float32)
+    return acc / m
+
+
+def init_ef_state(params):
+    """f32 error-feedback residuals, one per param leaf (all zeros)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _donating_update(reg, p_h, g_h, mu_h, nu_h, scale_h, lr_h, bc1_h, bc2_h,
+                     opt_cfg: AdamWConfig):
+    """Emit the three in-place AdamW nodes for one leaf: (p2, mu2, nu2),
+    each donating its own buffer.  One shared ``leaf_update`` callable,
+    three projections — XLA dedups the identical pure subcomputation."""
+    g = reg.g
+    nids = tuple(reg.nid_of(h) for h in
+                 (p_h, g_h, mu_h, nu_h, scale_h, lr_h, bc1_h, bc2_h))
+    static = (("b1", opt_cfg.b1), ("b2", opt_cfg.b2), ("eps", opt_cfg.eps),
+              ("weight_decay", opt_cfg.weight_decay),
+              ("decay", p_h.ndim >= 2))
+    outs = []
+    # output i writes over its OWN source buffer: p2 over p (nids[0]),
+    # mu2 over mu (nids[2]), nu2 over nu (nids[3]) — g (nids[1]) is read
+    # by all three and never donated
+    for i, (src, don) in enumerate(zip((p_h, mu_h, nu_h),
+                                       (nids[0], nids[2], nids[3]))):
+        t = TensorType(tuple(src.shape), str(src.dtype))
+        nid = g.add("pyfunc", nids, t, pdims=tuple(range(len(t.shape))),
+                    fn=leaf_update, static=static, out=i, donates=don)
+        outs.append(reg.handle(nid))
+    return tuple(outs)
+
+
+def make_region_train_step(model, opt_cfg: AdamWConfig, mesh=None,
+                           cfg: TrainConfig = TrainConfig()):
+    """Returns ``(step, shardings)``; ``step(state, batch) -> (state,
+    metrics)`` with ``state = {"params", "opt"}`` (plus ``"ef"`` residuals
+    when ``cfg.compress_pod_grads``).  The caller must treat the passed
+    state as CONSUMED (buffers are donated), exactly like the per-op
+    path's ``donate_argnums=(0,)``.
+
+    Call eagerly at top level — the first call captures + compiles the
+    joint fwd+bwd program, every later call with the same shapes replays
+    it from the program cache (one dict probe + one jitted call).
+    """
+    tap = cfg.tapir_config()
+    policy = cfg.remat if cfg.remat in ("none", "dots", "full", "auto") \
+        else "auto"
+    cdt = jnp.dtype(getattr(model.cfg, "compute_dtype", "bfloat16")) \
+        if hasattr(model, "cfg") else jnp.bfloat16
+    compress = bool(cfg.compress_pod_grads)
+
+    def _loss(params, mb):
+        if cfg.bf16_params_in_loss:
+            params = jax.tree_util.tree_map(
+                lambda p: (p.astype(cdt)
+                           if jnp.dtype(p.dtype) == jnp.float32 else p),
+                params)
+        return model.loss(params, mb)
+
+    @tapir.parallel_region(name="train_step")
+    def _captured(state, batch, aux):
+        # ``aux`` (memoized rope tables, ...) is bound as argument leaves
+        # purely so the forward's region inputs all come from arguments —
+        # the replay-cache requirement; the model fetches the identical
+        # objects itself.
+        del aux
+        reg = tapir._active_region()
+        params = state["params"]
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+
+        if cfg.microbatches > 1:
+            k = cfg.microbatches
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+            losses, per_mb = [], []
+            for i in range(k):
+                mb = jax.tree_util.tree_map(lambda a: a[i], mbs)
+                # earlier microbatches' loss/grad handles must survive
+                # this call's in-place CSE/DCE — thread them through as
+                # kept outputs and rebind (autodiff.grad docstring)
+                live = losses + [h for row in per_mb for h in row]
+                if live:
+                    li, gi, live = autodiff.grad(
+                        _loss(params, mb), leaves, policy=policy, keep=live)
+                    it = iter(live)
+                    losses = [next(it) for _ in losses]
+                    per_mb = [[next(it) for _ in row] for row in per_mb]
+                else:
+                    li, gi = autodiff.grad(_loss(params, mb), leaves,
+                                           policy=policy)
+                losses.append(li)
+                per_mb.append(gi)
+            loss = tapir.lift(_acc_mean_losses, *losses, m=k)
+            grads = [tapir.lift(_acc_mean_grads, *(per_mb[i][j]
+                                                   for i in range(k)), m=k)
+                     for j in range(len(leaves))]
+        else:
+            loss, grads = autodiff.grad(_loss(params, batch), leaves,
+                                        policy=policy)
+
+        new_ef = None
+        if compress:
+            ef_leaves = jax.tree_util.tree_leaves(state["ef"])
+            deq, new_ef = [], []
+            for g_h, r_h in zip(grads, ef_leaves):
+                d = tapir.lift(_ef_quantize, g_h, r_h)
+                deq.append(d[0])
+                # residual update in place: re-emit output 1 as a donating
+                # node (lift has no donation surface)
+                r_nid = reg.g.add(
+                    "pyfunc", (reg.nid_of(g_h), reg.nid_of(r_h)),
+                    TensorType(tuple(r_h.shape), str(r_h.dtype)),
+                    pdims=tuple(range(r_h.ndim)), fn=_ef_quantize, out=1,
+                    donates=reg.nid_of(r_h))
+                new_ef.append(reg.handle(r_nid))
+            grads = deq
+
+        gnorm = tapir.lift(global_norm_leaves, *grads)
+        scale = tapir.lift(clip_scale, gnorm, max_norm=opt_cfg.grad_clip)
+        step2 = reg.handle(reg.g.add(
+            "pyfunc", (reg.nid_of(state["opt"]["step"]),),
+            TensorType((), "int32"), fn=_bump_step,
+            donates=reg.nid_of(state["opt"]["step"])))
+        lr, bc1, bc2 = tapir.lift(step_factors, step2, cfg=opt_cfg)
+
+        mu_l = jax.tree_util.tree_leaves(state["opt"]["mu"])
+        nu_l = jax.tree_util.tree_leaves(state["opt"]["nu"])
+        p2, mu2, nu2 = [], [], []
+        for p_h, g_h, mu_h, nu_h in zip(leaves, grads, mu_l, nu_l):
+            a, b, c = _donating_update(reg, p_h, g_h, mu_h, nu_h,
+                                       scale, lr, bc1, bc2, opt_cfg)
+            p2.append(a)
+            mu2.append(b)
+            nu2.append(c)
+
+        unf = jax.tree_util.tree_unflatten
+        new_state = {"params": unf(treedef, p2),
+                     "opt": {"mu": unf(treedef, mu2),
+                             "nu": unf(treedef, nu2), "step": step2}}
+        if new_ef is not None:
+            new_state["ef"] = unf(treedef, new_ef)
+        return new_state, {"loss": loss, "lr": lr, "grad_norm": gnorm}
+
+    def step(state, batch):
+        aux = model.capture_aux(batch) if hasattr(model, "capture_aux") \
+            else ()
+        with use(tap):
+            return _captured(state, batch, aux)
+
+    shardings = state_shardings(model, mesh, cfg.strategy) \
+        if mesh is not None else None
+    return step, shardings

@@ -556,3 +556,50 @@ def test_invalidated_mesh_cannot_resurrect_from_disk(tmp_path):
     clear_cache()
     tapir.invalidate_mesh((("model", 64),))
     assert len(tapir.program_cache(cfg).entries()) == 1
+
+
+def test_pre_bump_pipeline_entry_misses_cleanly(tmp_path, monkeypatch):
+    """Regression for the PIPELINE_VERSION bump: an L2 entry persisted by
+    the previous pipeline (different lowering semantics for the same graph
+    signature) must MISS cleanly — recompile, never replay.  Two layers:
+    the salt is part of the key digest (old entries are unreachable, not
+    even probed → no quarantine) AND part of the sidecar metadata (a
+    forged same-digest entry skew-misses)."""
+    import repro.cache
+    import repro.cache.disk as disk_mod
+    d = str(tmp_path / "store")
+    old = "repro-pipeline-8"
+    assert repro.cache.PIPELINE_VERSION != old, \
+        "bump test assumes the salt moved past pipeline-8"
+
+    # populate the store as the PREVIOUS pipeline would have
+    clear_cache()
+    monkeypatch.setattr(repro.cache, "PIPELINE_VERSION", old)
+    monkeypatch.setattr(disk_mod, "PIPELINE_VERSION", old)
+    out_old, st_old = _region_program(d)
+    assert st_old["l2_writes"] == 1
+    monkeypatch.undo()
+
+    # current pipeline: clean miss + recompile, old entry left in place
+    clear_cache()
+    out_new, st_new = _region_program(d)
+    assert st_new["l2_hits"] == 0, "pre-bump entry must not replay"
+    assert st_new["compiled_programs"] == 1
+    assert st_new["l2_quarantined"] == 0, \
+        "key-level miss: the stale entry is unreachable, not corrupt"
+    assert len(ProgramDiskCache(d, "read").entries()) == 2
+    assert out_new.tobytes() == out_old.tobytes()
+
+    # metadata layer: a same-digest entry claiming the old pipeline salt
+    # (e.g. a hand-copied store) skew-misses instead of replaying
+    l2 = ProgramDiskCache(d, "readwrite")
+    for digest, _ in l2.entries():
+        _, json_path = l2.entry_paths(digest)
+        meta = json.load(open(json_path))
+        meta["pipeline"] = old
+        with open(json_path, "w") as f:
+            json.dump(meta, f)
+    clear_cache()
+    _, st3 = _region_program(d)
+    assert st3["l2_hits"] == 0 and st3["compiled_programs"] == 1
+    assert st3["l2_quarantined"] >= 1, "metadata skew must quarantine"

@@ -1,0 +1,354 @@
+"""Region-captured training step vs the per-op reference.
+
+The contract is *bitwise*: capturing the step through ``tapir.region`` —
+per-node VJP backward, joint fwd+bwd pass pipeline, roofline remat,
+donated in-place AdamW — changes WHERE the computation is seen, never
+WHAT is computed.  Loss, params, and optimizer state must match the
+per-op ``jax.value_and_grad`` path bit for bit across multiple steps on
+a fixed seed, and the state buffers must actually be donated (pointer
+identity), the same machinery KV pages use in serving.
+
+Bitwise parity is asserted in float32 compute.  XLA CPU *emulates*
+bfloat16 by upcasting to f32 and re-rounding, and where the re-round
+lands depends on how the surrounding jit partitions into fusions — two
+structurally identical jaxprs compiled in different contexts can differ
+in the last ulp (a bare ``lax.scan`` vs its own python-unrolled body
+already shows this).  So bf16-bitwise across *different* compilation
+partitionings is not well-defined on this backend; in f32 the backend
+computes natively and parity is exact.  The bf16 path keeps its own
+test: forward loss bitwise, grads within a few bf16 ulp.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core import tapir
+from repro.core.tapir import clear_cache, use
+from repro.models.base import get_model
+from repro.optim import AdamWConfig, adamw_update
+from repro.train import TrainConfig, init_state, make_region_train_step
+
+B, S, STEPS = 2, 16, 3
+
+
+def _model_and_batches(arch="qwen2_5_3b", batch=B, n=STEPS, dtype=None):
+    cfg = C.get_smoke(arch)
+    if dtype is not None:
+        cfg = dataclasses.replace(cfg, compute_dtype=dtype)
+    model = get_model(cfg)
+    rng = np.random.default_rng(0)
+    batches = []
+    for _ in range(n):
+        tok = rng.integers(1, min(cfg.vocab, 100), size=(batch, S))
+        batches.append({"tokens": jnp.asarray(tok, jnp.int32),
+                        "labels": jnp.asarray(tok, jnp.int32)})
+    return model, batches
+
+
+def _opt_cfg(steps=STEPS):
+    return AdamWConfig(lr=3e-4, total_steps=steps, warmup_steps=1)
+
+
+def _per_op_step(model, opt_cfg, tcfg):
+    """The PR 0 reference: jax.value_and_grad through the per-op path
+    (module-level jit units), AdamW recomposed tree-wide."""
+    tap = tcfg.tapir_config()
+
+    def raw_step(state, batch):
+        def loss_fn(p):
+            with use(tap):
+                return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        p2, o2, m = adamw_update(state["params"], grads, state["opt"],
+                                 opt_cfg)
+        return {"params": p2, "opt": o2}, {"loss": loss, **m}
+
+    return jax.jit(raw_step)
+
+
+def _tree_bitwise(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+def _pointers(tree):
+    return [l.unsafe_buffer_pointer()
+            for l in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity with the per-op path
+# ---------------------------------------------------------------------------
+
+def test_captured_step_bitwise_matches_per_op():
+    """Reference = the ``train/step.py`` DEFAULT config (remat="full"):
+    per-layer ``jax.checkpoint`` makes each block's backward a transpose
+    unit, which is the association the per-node VJP reproduces.  Float32
+    compute — see module docstring for why bf16 bitwise-across-
+    partitionings is not a meaningful contract on the CPU backend."""
+    clear_cache()
+    model, batches = _model_and_batches(dtype="float32")
+    opt_cfg = _opt_cfg()
+    tcfg = TrainConfig(mode="tapir", remat="auto")
+
+    ref_step = _per_op_step(model, opt_cfg, TrainConfig(mode="tapir",
+                                                        remat="full"))
+    cap_step, _ = make_region_train_step(model, opt_cfg, mesh=None, cfg=tcfg)
+
+    ref = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    cap = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    assert _tree_bitwise(ref["params"], cap["params"])
+
+    for i, b in enumerate(batches):
+        ref, mr = ref_step(ref, b)
+        cap, mc = cap_step(cap, b)
+        assert np.asarray(mr["loss"]).tobytes() == \
+            np.asarray(mc["loss"]).tobytes(), f"loss diverged at step {i}"
+    assert _tree_bitwise(ref["params"], cap["params"]), "params diverged"
+    assert _tree_bitwise(ref["opt"], cap["opt"]), "optimizer state diverged"
+
+
+def test_captured_step_bf16_forward_bitwise_grads_close():
+    """What survives bf16 emulation: the forward loss is bitwise equal
+    (the capture replays the per-op dtype chain exactly — epilogue
+    fusion casts to the consumer's dtype, shallow stacks unroll in every
+    mode), and one full step's params stay within a few bf16 ulp."""
+    clear_cache()
+    model, batches = _model_and_batches(n=1)
+    opt_cfg = _opt_cfg(steps=1)
+    ref_step = _per_op_step(model, opt_cfg, TrainConfig(mode="tapir",
+                                                        remat="full"))
+    cap_step, _ = make_region_train_step(
+        model, opt_cfg, mesh=None, cfg=TrainConfig(mode="tapir",
+                                                   remat="auto"))
+    ref = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    cap = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    ref, mr = ref_step(ref, batches[0])
+    cap, mc = cap_step(cap, batches[0])
+    assert np.asarray(mr["loss"]).tobytes() == np.asarray(mc["loss"]).tobytes()
+    # one AdamW update moves a param by at most ~lr (3e-4, normalized
+    # step), so a few-ulp bf16 grad wobble perturbs params by < 2*lr in
+    # absolute terms; relative tolerance is meaningless where the grad
+    # itself sits near zero (the normalized update flips sign)
+    for (path, r), c in zip(
+            jax.tree_util.tree_flatten_with_path(ref["params"])[0],
+            jax.tree_util.tree_leaves(cap["params"])):
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64), np.asarray(c, np.float64),
+            rtol=0, atol=2e-3,
+            err_msg=f"params{jax.tree_util.keystr(path)}")
+
+
+def test_captured_step_donates_params_and_opt_state():
+    """Params + mu/nu moments must update IN PLACE: every new leaf reuses
+    the donated input buffer (pointer identity), so steady-state training
+    allocates no per-step param/moment copies."""
+    clear_cache()
+    model, batches = _model_and_batches()
+    opt_cfg = _opt_cfg()
+    step, _ = make_region_train_step(model, opt_cfg, mesh=None,
+                                     cfg=TrainConfig(mode="tapir",
+                                                     remat="auto"))
+    state = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    state, _ = step(state, batches[0])          # warm: capture + compile
+    before = _pointers(state["params"]) + _pointers(state["opt"]["mu"]) \
+        + _pointers(state["opt"]["nu"])
+    state, _ = step(state, batches[1])          # replayed program
+    after = _pointers(state["params"]) + _pointers(state["opt"]["mu"]) \
+        + _pointers(state["opt"]["nu"])
+    assert before == after, (
+        "donation broken: %d/%d leaves moved to fresh buffers"
+        % (sum(x != y for x, y in zip(before, after)), len(before)))
+
+
+def test_captured_step_replays_from_program_cache():
+    clear_cache()
+    model, batches = _model_and_batches()
+    opt_cfg = _opt_cfg()
+    step, _ = make_region_train_step(model, opt_cfg, mesh=None,
+                                     cfg=TrainConfig(mode="tapir",
+                                                     remat="auto"))
+    state = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    state, _ = step(state, batches[0])
+    compiled = tapir.cache_stats()["compiled_programs"]
+    assert compiled >= 1
+    state, _ = step(state, batches[1])
+    state, _ = step(state, batches[2])
+    assert tapir.cache_stats()["compiled_programs"] == compiled, \
+        "later steps must replay the cached program, not recompile"
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulation inside the captured step
+# ---------------------------------------------------------------------------
+
+def test_captured_microbatch_accumulation_bitwise():
+    """M=2 accumulation inside the captured step must reproduce the
+    reference order exactly: zero-init f32 accumulator, ascending
+    microbatch adds, divide at the end — then one AdamW update.  Float32
+    compute, same rationale as the single-batch bitwise test."""
+    clear_cache()
+    model, batches = _model_and_batches(batch=4, n=2, dtype="float32")
+    opt_cfg = _opt_cfg(steps=2)
+    tcfg = TrainConfig(mode="tapir", remat="auto", microbatches=2)
+    step, _ = make_region_train_step(model, opt_cfg, mesh=None, cfg=tcfg)
+
+    tap = TrainConfig(mode="tapir", remat="full").tapir_config()
+
+    def ref_step(state, batch):
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape(2, x.shape[0] // 2, *x.shape[1:]), batch)
+
+        def loss_fn(p, mb):
+            with use(tap):
+                return model.loss(p, mb)
+
+        acc_l, acc_g = 0.0, jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+        for i in range(2):
+            mb = jax.tree_util.tree_map(lambda a: a[i], mbs)
+            li, gi = jax.value_and_grad(loss_fn)(state["params"], mb)
+            acc_l = acc_l + li
+            acc_g = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc_g, gi)
+        loss = acc_l / 2
+        grads = jax.tree_util.tree_map(lambda a: a / 2, acc_g)
+        p2, o2, m = adamw_update(state["params"], grads, state["opt"],
+                                 opt_cfg)
+        return {"params": p2, "opt": o2}, {"loss": loss, **m}
+
+    ref_step = jax.jit(ref_step)
+    ref = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    cap = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    for b in batches:
+        ref, mr = ref_step(ref, b)
+        cap, mc = step(cap, b)
+        assert np.asarray(mr["loss"]).tobytes() == \
+            np.asarray(mc["loss"]).tobytes()
+    assert _tree_bitwise(ref["params"], cap["params"])
+    assert _tree_bitwise(ref["opt"], cap["opt"])
+
+
+# ---------------------------------------------------------------------------
+# int8+EF gradient compression folded into the captured step
+# ---------------------------------------------------------------------------
+
+def test_captured_step_compressed_grads_ef_bitwise():
+    """``compress_pod_grads``: the captured step quantize-dequantizes
+    each grad leaf (int8 + error feedback) before clip/AdamW, carrying
+    the f32 residual in ``state["ef"]`` — donated in place like the
+    moments.  Must match the jitted per-op reference running the same
+    ``_ef_quantize`` leafwise, residuals included, across two steps."""
+    from repro.train.region_step import _ef_quantize, init_ef_state
+
+    clear_cache()
+    model, batches = _model_and_batches(n=2, dtype="float32")
+    opt_cfg = _opt_cfg(steps=2)
+    step, _ = make_region_train_step(
+        model, opt_cfg, mesh=None,
+        cfg=TrainConfig(mode="tapir", remat="auto",
+                        compress_pod_grads=True))
+
+    tap = TrainConfig(mode="tapir", remat="full").tapir_config()
+
+    def ref_step(state, batch):
+        def loss_fn(p):
+            with use(tap):
+                return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        gl, td = jax.tree_util.tree_flatten(grads)
+        deq, ef2 = [], []
+        for g, r in zip(gl, jax.tree_util.tree_leaves(state["ef"])):
+            d, r2 = _ef_quantize(g, r)
+            deq.append(d)
+            ef2.append(r2)
+        p2, o2, m = adamw_update(state["params"],
+                                 jax.tree_util.tree_unflatten(td, deq),
+                                 state["opt"], opt_cfg)
+        return {"params": p2, "opt": o2,
+                "ef": jax.tree_util.tree_unflatten(td, ef2)}, \
+            {"loss": loss, **m}
+
+    ref_step = jax.jit(ref_step)
+    ref = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    ref["ef"] = init_ef_state(ref["params"])
+    cap = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    cap["ef"] = init_ef_state(cap["params"])
+
+    for b in batches:
+        ref, mr = ref_step(ref, b)
+        ef_ptr = _pointers(cap["ef"])
+        cap, mc = step(cap, b)
+        assert np.asarray(mr["loss"]).tobytes() == \
+            np.asarray(mc["loss"]).tobytes()
+    assert _tree_bitwise(ref["params"], cap["params"])
+    assert _tree_bitwise(ref["opt"], cap["opt"])
+    assert _tree_bitwise(ref["ef"], cap["ef"])
+    # compression actually engaged: some residual is nonzero
+    assert any(np.abs(np.asarray(l)).max() > 0
+               for l in jax.tree_util.tree_leaves(cap["ef"]))
+    # and the EF residuals update in place on the replayed step
+    assert ef_ptr == _pointers(cap["ef"]), "EF residuals not donated"
+
+
+# ---------------------------------------------------------------------------
+# remat is a schedule decision, visible in explain()
+# ---------------------------------------------------------------------------
+
+def test_explain_reports_gradient_program_and_remat():
+    clear_cache()
+    model, batches = _model_and_batches(n=1)
+    opt_cfg = _opt_cfg(steps=1)
+    step, _ = make_region_train_step(model, opt_cfg, mesh=None,
+                                     cfg=TrainConfig(mode="tapir",
+                                                     remat="auto"))
+    state = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    step(state, batches[0])
+    report = tapir.explain()
+    assert "== gradient programs ==" in report
+    assert "remat" in report and "fwd nodes" in report and \
+        "bwd nodes" in report
+    graphs = [g for g in tapir.cached_graphs().values()
+              if getattr(g, "grad_meta", None)]
+    assert graphs, "captured step must leave a gradient program behind"
+    meta = graphs[0].grad_meta
+    assert meta["n_fwd"] > 0 and meta["n_bwd"] > 0
+    assert meta["remat"]["store"] + meta["remat"]["recompute"] > 0
+    assert meta["bytes_stored"] >= 0 and meta["bytes_recomputed"] >= 0
+
+
+def test_remat_policy_changes_schedule_not_numerics():
+    """"full" forces recompute everywhere the rule allows; "none" stores
+    everything.  Both must produce bitwise the same loss — remat is a
+    schedule decision, not a numerics one.  Float32: the two joint
+    fwd+bwd programs differ structurally, so bf16 emulation would
+    re-round them differently (module docstring)."""
+    losses = {}
+    for policy in ("none", "full"):
+        clear_cache()
+        model, batches = _model_and_batches(n=1, dtype="float32")
+        opt_cfg = _opt_cfg(steps=1)
+        step, _ = make_region_train_step(
+            model, opt_cfg, mesh=None,
+            cfg=TrainConfig(mode="tapir", remat=policy))
+        state = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+        _, m = step(state, batches[0])
+        losses[policy] = np.asarray(m["loss"]).tobytes()
+        graphs = [g for g in tapir.cached_graphs().values()
+                  if getattr(g, "grad_meta", None)]
+        meta = graphs[0].grad_meta
+        if policy == "full":
+            assert meta["remat"]["recompute"] > 0
+        else:
+            assert meta["remat"]["recompute"] == 0
+    assert losses["none"] == losses["full"]

@@ -62,6 +62,36 @@ def test_clip_by_global_norm():
     assert float(norm) > 1.0
 
 
+def test_clip_by_global_norm_zero_and_denormal_guard():
+    """Regression: an all-zero gradient tree used to divide ``max_norm/0``
+    to inf (scale inf -> NaN params on the next update).  The guard must
+    return the tree unchanged (scale 1.0) for zero AND denormal norms,
+    and stay exact for ordinary norms."""
+    zeros = {"a": jnp.zeros((7,)), "b": jnp.zeros((3, 2))}
+    clipped, norm = clip_by_global_norm(zeros, 1.0)
+    assert float(norm) == 0.0
+    for k in zeros:
+        np.testing.assert_array_equal(np.asarray(clipped[k]),
+                                      np.asarray(zeros[k]))
+        assert np.isfinite(np.asarray(clipped[k])).all()
+    # denormal global norm: max_norm / gnorm overflows f32 unguarded (the
+    # scale must be exactly 1.0, not ~8.5e41; XLA CPU flushes the denormal
+    # leaves themselves, so assert on the scale + finiteness, not bits)
+    from repro.optim.adamw import clip_scale
+    denorm = {"a": jnp.full((4,), 1e-42, jnp.float32)}
+    clipped, norm = clip_by_global_norm(denorm, 1.0)
+    assert np.isfinite(np.asarray(clipped["a"])).all()
+    assert float(clip_scale(norm, 1.0)) == 1.0
+    assert float(clip_scale(jnp.float32(1e-40), 1.0)) == 1.0
+    # max_norm=0 with zero grads is the 0/0 corner — must still be 1.0
+    assert float(clip_scale(jnp.float32(0.0), 0.0)) == 1.0
+    # an ordinary norm is untouched by the guard
+    from repro.optim import global_norm
+    big = {"a": jnp.ones((16,)) * 2.0}
+    clipped, norm = clip_by_global_norm(big, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
 # ---------------------------------------------------------------------------
 # gradient compression
 # ---------------------------------------------------------------------------
@@ -94,6 +124,67 @@ def test_error_feedback_accumulates_unbiased():
     resid = np.abs(total_true - total_sent).max()
     # residual is bounded by one step's quantization error, not 50 steps'
     assert resid < 5e-4
+
+
+def test_int8_roundtrip_edge_blocks():
+    """Edge blocks the happy-path roundtrip never exercises: an all-zero
+    leaf (amax 0 -> the scale guard must pick 1.0, not divide 0/0) and a
+    single-element tail (size % BLOCK == 1 -> pad/unpad must restore the
+    exact shape with the padding discarded)."""
+    from repro.optim.compress import BLOCK
+    # all-zero block: exact roundtrip, finite scale
+    z = jnp.zeros((2 * BLOCK,))
+    q, scale = compress_int8(z)
+    assert np.isfinite(np.asarray(scale)).all()
+    assert not np.asarray(q).any()
+    np.testing.assert_array_equal(np.asarray(decompress_int8(q, scale,
+                                                             z.shape)),
+                                  np.asarray(z))
+    # single-element tail: one value in a padded block
+    g = jnp.asarray(np.concatenate([np.linspace(-1, 1, BLOCK),
+                                    [0.5]]).astype(np.float32))
+    q, scale = compress_int8(g)
+    assert q.shape == (2, BLOCK) and scale.shape == (2, 1)
+    back = decompress_int8(q, scale, g.shape)
+    assert back.shape == g.shape
+    err = np.abs(np.asarray(back - g))
+    assert err.max() <= float(np.abs(np.asarray(g)).max()) / 127.0
+    # the tail element survives with its own block's scale
+    assert abs(float(back[-1]) - 0.5) <= 0.5 / 127.0
+    # degenerate leaf: a single scalar-ish [1] tensor
+    one = jnp.asarray([3.0])
+    q, scale = compress_int8(one)
+    back = decompress_int8(q, scale, one.shape)
+    assert back.shape == (1,)
+    assert abs(float(back[0]) - 3.0) <= 3.0 / 127.0
+
+
+def test_error_feedback_two_step_state():
+    """EF state accumulation across exactly two steps: step 2 must quantize
+    grad + step-1 residual (not the raw grad), and the new residual must
+    equal that sum minus what was sent."""
+    rng = np.random.default_rng(3)
+    g1 = jnp.asarray(rng.normal(size=(512,)).astype(np.float32) * 1e-3)
+    g2 = jnp.asarray(rng.normal(size=(512,)).astype(np.float32) * 1e-3)
+    state = CompressionState.init({"g": g1})
+    np.testing.assert_array_equal(np.asarray(state.residual["g"]), 0.0)
+
+    def send(g, r):
+        gf = g + r
+        q, scale = compress_int8(gf)
+        sent = decompress_int8(q, scale, g.shape)
+        return sent, gf - sent
+
+    sent1, r1 = send(g1, state.residual["g"])
+    state = CompressionState({"g": r1})
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(g1 - sent1),
+                               rtol=0, atol=0)
+    sent2, r2 = send(g2, state.residual["g"])
+    # step 2 quantized (g2 + r1): its residual closes the telescoping sum
+    np.testing.assert_allclose(np.asarray(sent1 + sent2 + r2),
+                               np.asarray(g1 + g2), rtol=0, atol=1e-7)
+    # and carrying the residual actually mattered (r1 is not all zero)
+    assert np.abs(np.asarray(r1)).max() > 0
 
 
 # ---------------------------------------------------------------------------
